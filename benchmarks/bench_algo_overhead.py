@@ -1,0 +1,65 @@
+"""Table I: orchestration-algorithm overhead vs communication time.
+
+Paper: 1D stencil (each rank exchanges with neighbours); Algo column is
+NIMBLE's planning time (0.032-0.048 ms on their CPUs), Comm is the actual
+transfer.  We time BOTH planner implementations — the faithful host
+(numpy) Algorithm 1 and the jitted vectorized MWU — against the modeled
+communication time for the same message sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.fabsim import simulate
+from repro.core.mcf import solve_mwu
+from repro.core.planner import PlannerConfig, plan_flows
+from repro.core.schedule import build_planner_tables
+from repro.core.topology import Topology
+
+from .common import emit, time_fn
+
+MB = 1 << 20
+
+
+def stencil_demands(n: int, size: float):
+    D = {}
+    for r in range(n):
+        D[(r, (r + 1) % n)] = size
+        D[(r, (r - 1) % n)] = size
+    return D
+
+
+def run() -> None:
+    cm = CostModel()
+    t = Topology(8, group_size=4)
+    tables = build_planner_tables(t)
+    cfg = PlannerConfig(chunk_bytes=float(MB))
+    planner = jax.jit(lambda d: plan_flows(d, tables, cfg)[0])
+
+    for size_mb in (16, 32, 64, 128, 256):
+        dem = stencil_demands(8, size_mb * MB)
+        Dm = np.zeros((8, 8), np.float32)
+        for (s, d), v in dem.items():
+            Dm[s, d] = v
+
+        us_jit = time_fn(
+            lambda: planner(jnp.asarray(Dm)).block_until_ready(), n=30
+        )
+        us_host = time_fn(lambda: solve_mwu(t, dem, cm, eps=1 * MB), n=5)
+        plan = solve_mwu(t, dem, cm, eps=1 * MB)
+        comm_ms = simulate(plan).completion_time * 1e3
+        emit(
+            f"table1/algo_jit/{size_mb}MB", us_jit,
+            f"algo={us_jit/1e3:.3f}ms comm={comm_ms:.3f}ms "
+            f"ratio={us_jit/1e3/comm_ms:.3f}",
+        )
+        emit(f"table1/algo_host/{size_mb}MB", us_host,
+             f"host_algo={us_host/1e3:.3f}ms (paper: 0.032-0.048ms)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Fig. 7: skewed All-to-Allv over 8 GPUs / 2 nodes, hotspot-ratio sweep.
+
+Each rank sends a ``hotspot`` fraction of its payload to one hot
+destination and spreads the rest evenly.  Compared: the NCCL baseline
+(static PXN routing + grouped-p2p round serialization), static multirail
+striping (UCX-like), and NIMBLE.  Paper: parity at low skew, up to 5.2x
+at hotspot >= 0.7.
+"""
+
+from __future__ import annotations
+
+from repro.core.cost import CostModel
+from repro.core.fabsim import simulate, simulate_nccl_rounds
+from repro.core.mcf import (
+    congestion_lower_bound,
+    solve_direct,
+    solve_mwu,
+    solve_static_striping,
+)
+from repro.core.topology import Topology
+
+from .common import emit
+
+MB = 1 << 20
+
+
+def demands(hot: float, per_rank_mb: float = 64, n: int = 8):
+    D = {}
+    for s in range(n):
+        for d in range(n):
+            if s == d:
+                continue
+            if hot > 0:
+                D[(s, d)] = per_rank_mb * MB * (
+                    hot if d == 0 else (1 - hot) / (n - 2)
+                )
+            else:
+                D[(s, d)] = per_rank_mb * MB / (n - 1)
+    return D
+
+
+def run() -> None:
+    cm = CostModel()
+    t = Topology(8, group_size=4)
+    for hot in (0.0, 0.2, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9):
+        D = demands(hot)
+        t_nimble = simulate(solve_mwu(t, D, cm, eps=1 * MB)).completion_time
+        t_direct = simulate(solve_direct(t, D, cm)).completion_time
+        t_stripe = simulate(solve_static_striping(t, D, cm)).completion_time
+        t_nccl = simulate_nccl_rounds(t, D, cm)
+        lb = congestion_lower_bound(t, D, cm)
+        emit(
+            f"fig7/hotspot_{hot}",
+            t_nimble * 1e6,
+            f"vs_nccl={t_nccl/t_nimble:.2f}x vs_direct={t_direct/t_nimble:.2f}x "
+            f"vs_stripe={t_stripe/t_nimble:.2f}x opt_gap={t_nimble/max(lb,1e-12):.2f}",
+        )
+    # paper headline: >= 5x at hotspot 0.7+
+    D = demands(0.9)
+    s = simulate_nccl_rounds(t, D, cm) / simulate(
+        solve_mwu(t, D, cm, eps=1 * MB)
+    ).completion_time
+    emit("fig7/paper_check/peak_speedup", 0.0,
+         f"got={s:.2f}x paper<=5.2x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + jnp-path timing).
+
+Wall times on CPU are NOT TPU predictions — the derived column carries the
+analytic FLOPs/bytes so the roofline context is explicit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import chunked_attention
+from repro.kernels.grouped_ffn.ops import grouped_ffn_scan
+from repro.kernels.token_scatter.ref import token_gather_ref
+
+from .common import emit, time_fn
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> None:
+    # chunked/flash attention
+    B, H, Hkv, S, Dh = 1, 8, 2, 4096, 64
+    q = jnp.asarray(RNG.normal(size=(B, H, S, Dh)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, Dh)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, Dh)).astype(np.float32))
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True))
+    us = time_fn(lambda: f(q, k, v).block_until_ready(), n=10)
+    flops = 4 * B * H * S * S * Dh / 2
+    emit("kernels/attention_4k", us, f"flops={flops:.2e}")
+
+    # grouped ffn
+    N, D, F, E = 8192, 512, 1024, 8
+    x = jnp.asarray(RNG.normal(size=(N, D)).astype(np.float32) * 0.1)
+    eid = jnp.asarray(RNG.integers(0, E, size=(N,)).astype(np.int32))
+    wg = jnp.asarray(RNG.normal(size=(E, D, F)).astype(np.float32) * 0.02)
+    wu = jnp.asarray(RNG.normal(size=(E, D, F)).astype(np.float32) * 0.02)
+    wd = jnp.asarray(RNG.normal(size=(E, F, D)).astype(np.float32) * 0.02)
+    g = jax.jit(lambda x, e: grouped_ffn_scan(x, e, wg, wu, wd))
+    us = time_fn(lambda: g(x, eid).block_until_ready(), n=5)
+    emit("kernels/grouped_ffn_8k", us, f"flops={6*N*D*F:.2e}")
+
+    # mlstm chunkwise scan (Pallas interpret on CPU)
+    from repro.kernels.mlstm_scan import mlstm_scan_ref
+
+    B, H, S, dh = 2, 4, 512, 64
+    qm = jnp.asarray(RNG.normal(size=(B, H, S, dh)).astype(np.float32) * 0.3)
+    km = jnp.asarray(RNG.normal(size=(B, H, S, dh)).astype(np.float32) * 0.3)
+    vm = jnp.asarray(RNG.normal(size=(B, H, S, dh)).astype(np.float32) * 0.3)
+    igm = jnp.asarray(RNG.normal(size=(B, H, S)).astype(np.float32))
+    lfm = jnp.asarray(
+        np.log(1 / (1 + np.exp(-(RNG.normal(size=(B, H, S)) + 2))))
+        .astype(np.float32))
+    ms = jax.jit(lambda *a: mlstm_scan_ref(*a))
+    us = time_fn(lambda: ms(qm, km, vm, igm, lfm).block_until_ready(), n=5)
+    emit("kernels/mlstm_scan_512", us,
+         f"state_bytes={B*H*dh*dh*4:.2e} per chunk (Pallas keeps in VMEM)")
+
+    # token gather
+    xg = jnp.asarray(RNG.normal(size=(8192, 512)).astype(np.float32))
+    idx = jnp.asarray(RNG.integers(0, 8192, size=(16384,)).astype(np.int32))
+    tg = jax.jit(token_gather_ref)
+    us = time_fn(lambda: tg(xg, idx).block_until_ready(), n=10)
+    emit("kernels/token_gather_16k", us, f"bytes={16384*512*4:.2e}")
+
+
+if __name__ == "__main__":
+    run()

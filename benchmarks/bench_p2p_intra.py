@@ -1,0 +1,55 @@
+"""Fig. 6(a)+(c): intra-node point-to-point bandwidth with 1/2/3 paths.
+
+Reproduces the paper's message-size sweep on the 4-GPU node model:
+direct NVLink (120 GB/s peak), +1 relay path (213.1), +2 relay paths
+(278.2); saturation beyond ~64 MB; multi-pathing disabled <= 1 MB
+(forward-overhead policy, Fig. 6c).
+"""
+
+from __future__ import annotations
+
+from repro.core.cost import CostModel
+from repro.core.fabsim import simulate
+from repro.core.mcf import solve_direct, solve_mwu
+from repro.core.topology import Topology
+
+from .common import emit
+
+MB = 1 << 20
+
+PAPER = {"direct": 120.0, "one_relay": 213.1, "two_relay": 278.2}
+
+
+def run() -> None:
+    cm = CostModel()
+    for size_mb in (1, 4, 16, 64, 256, 1024):
+        d = {(0, 1): size_mb * MB}
+        bw_direct = simulate(
+            solve_direct(Topology(4, 4), d, cm)
+        ).bandwidth_gbs()
+        plan1 = solve_mwu(Topology(3, 3), d, cm, eps=min(1 * MB, size_mb * MB // 4))
+        bw1 = simulate(plan1).bandwidth_gbs()
+        plan2 = solve_mwu(Topology(4, 4), d, cm, eps=min(1 * MB, size_mb * MB // 4))
+        bw2 = simulate(plan2).bandwidth_gbs()
+        emit(f"fig6a/intra_direct/{size_mb}MB", 0.0, f"{bw_direct:.1f}GB/s")
+        emit(f"fig6a/intra_1relay/{size_mb}MB", 0.0,
+             f"{bw1:.1f}GB/s paths={plan1.n_paths_used((0,1))}")
+        emit(f"fig6a/intra_2relay/{size_mb}MB", 0.0,
+             f"{bw2:.1f}GB/s paths={plan2.n_paths_used((0,1))}")
+    # paper-point comparison at 256 MB
+    d = {(0, 1): 256 * MB}
+    bw1 = simulate(solve_mwu(Topology(3, 3), d, cm, eps=1 * MB)).bandwidth_gbs()
+    bw2 = simulate(solve_mwu(Topology(4, 4), d, cm, eps=1 * MB)).bandwidth_gbs()
+    for name, got, want in (("direct", 120.0, PAPER["direct"]),
+                            ("one_relay", bw1, PAPER["one_relay"]),
+                            ("two_relay", bw2, PAPER["two_relay"])):
+        emit(f"fig6a/paper_check/{name}", 0.0,
+             f"got={got:.1f} paper={want} err={abs(got-want)/want*100:.1f}%")
+    # Fig 6c: the policy — 1 MB must not split
+    plan_small = solve_mwu(Topology(4, 4), {(0, 1): 1 * MB}, cm, eps=256 * 1024)
+    emit("fig6c/no_split_at_1MB", 0.0,
+         f"paths={plan_small.n_paths_used((0,1))} (expect 1)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn: Callable, *args, n: int = 20, warmup: int = 3) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]

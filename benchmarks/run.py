@@ -1,0 +1,56 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section markers) and
+writes the aggregate to benchmarks/results.csv.
+
+  Fig 6(a,c)  bench_p2p_intra       intra-node multi-path bandwidth
+  Fig 6(b,d)  bench_p2p_inter       inter-node multi-rail bandwidth
+  Fig 7       bench_alltoallv_skew  skewed All-to-Allv sweep
+  Fig 8       bench_moe_e2e         MoE end-to-end breakdown
+  Table I     bench_algo_overhead   planner overhead vs comm time
+  §V-E        bench_multitenant     background-tenant interference
+  (extra)     bench_kernels         kernel micro-benches
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def main() -> None:
+    from . import (
+        bench_algo_overhead,
+        bench_alltoallv_skew,
+        bench_kernels,
+        bench_moe_e2e,
+        bench_multitenant,
+        bench_p2p_async,
+        bench_p2p_inter,
+        bench_p2p_intra,
+        common,
+    )
+
+    sections = [
+        ("fig6_intra", bench_p2p_intra),
+        ("fig6_inter", bench_p2p_inter),
+        ("async_p2p", bench_p2p_async),
+        ("fig7_alltoallv", bench_alltoallv_skew),
+        ("fig8_moe", bench_moe_e2e),
+        ("table1_overhead", bench_algo_overhead),
+        ("vE_multitenant", bench_multitenant),
+        ("kernels", bench_kernels),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in sections:
+        print(f"# --- {name} ---")
+        mod.run()
+    out = os.path.join(os.path.dirname(__file__), "results.csv")
+    with open(out, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for row in common.ROWS:
+            f.write(f"{row[0]},{row[1]:.3f},{row[2]}\n")
+    print(f"# wrote {len(common.ROWS)} rows to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving across architecture families.
+
+Drives the ServeEngine (prefill + autoregressive decode with per-family
+caches: KV ring buffers, Mamba/xLSTM recurrent states, whisper cross-attn)
+for one reduced model per family, with batched requests and greedy +
+temperature sampling.  Demonstrates the serving substrate the decode input
+shapes (decode_32k / long_500k) lower in the dry-run.
+
+Run:
+    PYTHONPATH=src python examples/serve_multiarch.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.registry import build_model
+from repro.serve.engine import ServeEngine
+from repro.sharding.context import SINGLE
+
+FAMILIES = [
+    ("smollm-135m", "dense"),
+    ("granite-moe-1b-a400m", "moe"),
+    ("zamba2-1.2b", "hybrid"),
+    ("xlstm-125m", "ssm"),
+]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch, family in FAMILIES:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, SINGLE)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, params, max_len=48)
+
+        prompts = rng.integers(0, cfg.vocab, (4, 8)).astype(np.int32)
+        t0 = time.time()
+        greedy = engine.generate(prompts, n_new=16, temperature=0.0)
+        sampled = engine.generate(prompts, n_new=16, temperature=0.8, seed=1)
+        dt = time.time() - t0
+        assert greedy.shape == (4, 16) and sampled.shape == (4, 16)
+        # greedy decode is deterministic
+        again = engine.generate(prompts, n_new=16, temperature=0.0)
+        assert np.array_equal(greedy, again), "greedy decode not deterministic"
+        print(f"[serve] {family:7s} {cfg.name:28s} "
+              f"batch=4 new=16x2 in {dt:5.1f}s  "
+              f"greedy[0,:6]={greedy[0, :6].tolist()}")
+    print("[serve] all families served batched requests deterministically")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from .base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    all_configs,
+    get_config,
+    register,
+)
+
+__all__ = ["ModelConfig", "InputShape", "INPUT_SHAPES", "ARCH_IDS",
+           "get_config", "all_configs", "register"]

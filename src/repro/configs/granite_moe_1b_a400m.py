@@ -1,0 +1,19 @@
+"""Granite-3.0 1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+32 experts, top-8; small MoE — exercises EP skew at low expert counts.
+"""
+from .base import ModelConfig, register
+
+register(ModelConfig(
+    name="granite-moe-1b-a400m",
+    arch_type="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    n_experts=32,
+    top_k=8,
+    window=4096,
+))

@@ -1,0 +1,38 @@
+"""NIMBLE core: execution-time multi-path communication balancing.
+
+Public API:
+  Topology / LinkCaps        — interconnect model (topology.py)
+  CostModel / ResourceModel  — capacity-normalized cost F(L) (cost.py)
+  solve_mwu / solve_direct / solve_static_striping — Algorithm 1 + baselines
+  simulate / simulate_nccl_rounds — fabric simulator (fabsim.py)
+  PlannerConfig / plan_flows — jittable runtime planner (planner.py)
+  NimbleAllToAll             — scheduled shard_map dataplane (dataplane.py)
+  MoEDispatcher              — expert-parallel dispatch/combine (moe_comm.py)
+"""
+
+from .cost import CostModel, ResourceModel
+from .dataplane import NimbleAllToAll, baseline_all_to_all, ref_all_to_allv
+from .fabsim import SimResult, simulate, simulate_nccl_rounds
+from .mcf import (
+    Plan,
+    congestion_lower_bound,
+    solve_direct,
+    solve_mwu,
+    solve_static_striping,
+)
+from .moe_comm import MoECommConfig, MoEDispatcher
+from .paths import Path, all_pairs_paths, enumerate_paths
+from .planner import PlannerConfig, plan_flows, quantize_chunks
+from .schedule import build_planner_tables, build_schedule
+from .topology import LinkCaps, Topology
+
+__all__ = [
+    "Topology", "LinkCaps", "CostModel", "ResourceModel", "Plan",
+    "solve_mwu", "solve_direct", "solve_static_striping",
+    "congestion_lower_bound", "simulate", "simulate_nccl_rounds", "SimResult",
+    "PlannerConfig", "plan_flows", "quantize_chunks",
+    "build_schedule", "build_planner_tables",
+    "NimbleAllToAll", "baseline_all_to_all", "ref_all_to_allv",
+    "MoECommConfig", "MoEDispatcher",
+    "Path", "enumerate_paths", "all_pairs_paths",
+]

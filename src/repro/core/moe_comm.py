@@ -1,0 +1,214 @@
+"""Expert-parallel dispatch / combine over the NIMBLE dataplane (paper §V-D).
+
+The paper's headline workload: MoE token routing is a skewed All-to-Allv
+(dispatch) followed by expert FFN compute and the transposed All-to-Allv
+(combine).  This module implements the full endpoint-driven pipeline:
+
+  1. tokens are assigned to experts (top-k gating, done by the model);
+  2. assignments are packed into per-destination-device chunk buffers
+     ("Kernel Scatter", Pallas ``token_scatter`` on TPU, jnp fallback here);
+  3. the live demand matrix is planned + executed by
+     :class:`~repro.core.dataplane.NimbleAllToAll` — tokens ride a bf16/f32
+     payload, the per-token expert id rides a tiny f32 sideband on the SAME
+     plan (so routing stays consistent);
+  4. expert FFN runs on received tokens (``grouped_ffn`` kernel / ref);
+  5. outputs return in-place through the transposed plan and are
+     scatter-combined into the original token order with gate weights.
+
+Ordering/determinism: chunk -> slot maps are derived from the replicated plan
+on both sides (paper's per-destination reassembly queues).  Capacity: the
+static per-destination buffer implements a capacity factor; overflow tokens
+are dropped with a counter (the paper's no-drop deployments correspond to a
+large enough factor, see configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dataplane import NimbleAllToAll
+from .planner import PlannerConfig
+
+
+@dataclasses.dataclass
+class MoECommConfig:
+    n_devices: int                 # EP group size (model-axis)
+    n_experts: int
+    d_model: int
+    chunk_tokens: int = 16         # ε in tokens — planner chunk granularity
+    capacity_factor: float = 2.0   # per-destination buffer vs uniform share
+    group_size: int = 4            # chips per "node" on the NIMBLE axis
+    alt_frac: float = 0.5
+    mode: str = "nimble"           # nimble | direct | stripe
+    payload_dtype: jnp.dtype = jnp.float32
+
+    @property
+    def experts_per_device(self) -> int:
+        assert self.n_experts % self.n_devices == 0
+        return self.n_experts // self.n_devices
+
+
+class MoEDispatcher:
+    """Stateless (per-shape) dispatch/combine helper.  Use inside shard_map."""
+
+    def __init__(self, axis_name: str, cfg: MoECommConfig,
+                 planner_cfg: Optional[PlannerConfig] = None):
+        self.axis = axis_name
+        self.cfg = cfg
+        self._comms = {}
+        self._planner_cfg = planner_cfg
+
+    # -- static geometry -------------------------------------------------------
+    def capacity_tokens(self, n_assign: int) -> int:
+        cfg = self.cfg
+        per_dest = int(np.ceil(n_assign / cfg.n_devices * cfg.capacity_factor))
+        ct = cfg.chunk_tokens
+        return int(np.ceil(per_dest / ct)) * ct
+
+    def _comm(self, n_chunks: int, elems: int) -> NimbleAllToAll:
+        key = (n_chunks, elems)
+        if key not in self._comms:
+            chunk_bytes = float(
+                self.cfg.chunk_tokens * self.cfg.d_model
+                * jnp.dtype(self.cfg.payload_dtype).itemsize
+            )
+            self._comms[key] = NimbleAllToAll(
+                self.axis,
+                self.cfg.n_devices,
+                self.cfg.group_size,
+                max_chunks=n_chunks,
+                chunk_bytes=chunk_bytes,
+                alt_frac=self.cfg.alt_frac,
+                planner_cfg=self._planner_cfg,
+                mode=self.cfg.mode,
+            )
+        return self._comms[key]
+
+    # -- dispatch ----------------------------------------------------------------
+    def dispatch(
+        self,
+        tokens: jnp.ndarray,     # [T, d] local tokens
+        expert_idx: jnp.ndarray,  # [T, k] int32 global expert ids
+        token_valid: Optional[jnp.ndarray] = None,  # [T] bool ownership mask
+    ):
+        """Route token copies to expert-owning devices.
+
+        Returns (recv_tokens [n, C, ct, d], recv_expert [n, C, ct] local ids
+        with -1 padding, state) where ``state`` carries everything combine
+        needs (plan, slot maps, dropped-token mask).
+        """
+        cfg = self.cfg
+        n, ct, d = cfg.n_devices, cfg.chunk_tokens, cfg.d_model
+        T, k = expert_idx.shape
+        A = T * k
+        cap_tok = self.capacity_tokens(A)
+        C = cap_tok // ct
+        comm = self._comm(C, ct * d)
+
+        dest = (expert_idx // cfg.experts_per_device).reshape(A)  # [A]
+        if token_valid is not None:
+            # unowned tokens (replicated-token mode, DESIGN.md §5): route to
+            # a sentinel so they never enter any send buffer.
+            avalid = jnp.repeat(token_valid, k)
+            dest = jnp.where(avalid, dest, n)                      # sentinel
+        # stable pack: position of each assignment within its destination
+        order = jnp.argsort(dest, stable=True)                    # [A]
+        dest_sorted = dest[order]
+        counts = jnp.bincount(dest, length=n)                     # tokens/dest
+        offsets = jnp.cumsum(counts) - counts
+        slot_sorted = jnp.arange(A) - offsets[jnp.minimum(dest_sorted, n - 1)]
+        kept_sorted = (slot_sorted < cap_tok) & (dest_sorted < n)  # cap + owned
+        # scatter assignment a=order[r] -> (dest, slot)
+        slot = jnp.zeros((A,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+        kept = jnp.zeros((A,), bool).at[order].set(kept_sorted)
+
+        tok_flat = jnp.repeat(tokens, k, axis=0)                  # [A, d]
+        x = jnp.zeros((n, C * ct, d), cfg.payload_dtype)
+        x = x.at[dest, jnp.minimum(slot, cap_tok - 1)].add(
+            jnp.where(kept[:, None], tok_flat.astype(cfg.payload_dtype), 0)
+        )
+        e_side = jnp.full((n, C * ct, 1), -1.0, jnp.float32)
+        e_side = e_side.at[dest, jnp.minimum(slot, cap_tok - 1), 0].set(
+            jnp.where(kept, expert_idx.reshape(A).astype(jnp.float32), -1.0)
+        )
+
+        send_chunks = jnp.ceil(
+            jnp.minimum(counts, cap_tok) / ct
+        ).astype(jnp.int32)                                       # [n]
+        plan = comm.plan_from_counts(send_chunks)                 # [n, n, K]
+
+        y = comm.execute(x.reshape(n, C, ct * d), plan)
+        e_comm = self._comm(C, ct)  # sideband shares schedule shape
+        ey = e_comm.execute(e_side.reshape(n, C, ct), plan)
+
+        me = jax.lax.axis_index(self.axis)
+        recv_tokens = y.reshape(n, C, ct, d)
+        recv_tokens = recv_tokens.at[me].set(x.reshape(n, C, ct, d)[me])
+        e_recv = ey.reshape(n, C, ct)
+        e_recv = e_recv.at[me].set(e_side.reshape(n, C, ct)[me])
+        # decode sideband: pad slots stay -1 (zeros arriving decode to 0 but
+        # only within planned chunk counts; out-of-plan slots were zero-filled
+        # -> mark them invalid via the per-source chunk counts)
+        recv_chunk_counts = plan[:, me].sum(-1)                   # [n]
+        recv_chunk_counts = recv_chunk_counts.at[me].set(send_chunks[me])
+        cidx = jnp.arange(C)[None, :]
+        chunk_valid = cidx < recv_chunk_counts[:, None]           # [n, C]
+        expert_global = jnp.where(
+            chunk_valid[..., None], jnp.round(e_recv).astype(jnp.int32), -1
+        )
+        expert_local = jnp.where(
+            expert_global >= 0,
+            expert_global - me * cfg.experts_per_device,
+            -1,
+        )
+        # guard: mis-routed ids (shouldn't happen) masked out
+        expert_local = jnp.where(
+            (expert_local >= 0) & (expert_local < cfg.experts_per_device),
+            expert_local,
+            -1,
+        )
+        state = dict(
+            plan=plan,
+            dest=dest,
+            slot=slot,
+            kept=kept,
+            send_chunks=send_chunks,
+            C=C,
+            dropped=(~kept).sum(),
+        )
+        return recv_tokens, expert_local, state
+
+    # -- combine -----------------------------------------------------------------
+    def combine(
+        self,
+        expert_out: jnp.ndarray,   # [n, C, ct, d] outputs in recv layout
+        state,
+        gate_w: jnp.ndarray,       # [T, k] float gate weights
+    ) -> jnp.ndarray:
+        """Return expert outputs to token owners and gate-combine: [T, d]."""
+        cfg = self.cfg
+        n, ct, d = cfg.n_devices, cfg.chunk_tokens, cfg.d_model
+        T, k = gate_w.shape
+        C = state["C"]
+        comm = self._comm(C, ct * d)
+
+        # transpose plan: what I received per source is what I send back
+        plan_T = jnp.swapaxes(state["plan"], 0, 1)
+        y = comm.execute(
+            expert_out.reshape(n, C, ct * d).astype(cfg.payload_dtype), plan_T
+        )
+        me = jax.lax.axis_index(self.axis)
+        y = y.reshape(n, C, ct, d)
+        y = y.at[me].set(expert_out[me].astype(cfg.payload_dtype))
+        # gather each assignment's processed token from (dest, slot)
+        flat = y.reshape(n, C * ct, d)
+        a_out = flat[state["dest"], jnp.minimum(state["slot"], C * ct - 1)]
+        a_out = jnp.where(state["kept"][:, None], a_out, 0)
+        w = gate_w.reshape(T * k, 1).astype(a_out.dtype)
+        out = (a_out * w).reshape(T, k, d).sum(axis=1)
+        return out

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the grouped (per-expert) SwiGLU FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_ref(
+    x: jnp.ndarray,         # [N, D] tokens
+    expert_id: jnp.ndarray,  # [N] int32, -1 = invalid
+    wg: jnp.ndarray,        # [E, D, F] gate
+    wu: jnp.ndarray,        # [E, D, F] up
+    wd: jnp.ndarray,        # [E, F, D] down
+) -> jnp.ndarray:
+    """out[i] = SwiGLU_{expert_id[i]}(x[i]); invalid rows -> 0."""
+    E = wg.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for e in range(E):
+        h = jax.nn.silu(x.astype(jnp.float32) @ wg[e].astype(jnp.float32))
+        u = x.astype(jnp.float32) @ wu[e].astype(jnp.float32)
+        y = (h * u) @ wd[e].astype(jnp.float32)
+        out = jnp.where((expert_id == e)[:, None], y, out)
+    return jnp.where((expert_id >= 0)[:, None], out, 0).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .ops import mlstm_scan, mlstm_scan_op, mlstm_scan_ref
+
+__all__ = ["mlstm_scan_op", "mlstm_scan", "mlstm_scan_ref"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the chunkwise mLSTM scan kernel: the per-step cell
+recurrence (matches models/xlstm._mlstm_cell with zero-init state)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_scan_ref(q, k, v, ig, lf):
+    """q,k,v: [B, H, S, dh]; ig, lf: [B, H, S] -> h [B, H, S, dh]."""
+    b, hh, s, dh = q.shape
+
+    def step(state, inp):
+        C, n, m = state
+        qt, kt, vt, it, ft = inp                  # [B,H,dh] x3, [B,H] x2
+        m_new = jnp.maximum(ft + m, it)
+        a = jnp.exp(ft + m - m_new)
+        bw = jnp.exp(it - m_new)
+        C = C * a[..., None, None] + bw[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = n * a[..., None] + bw[..., None] * kt
+        num = jnp.einsum("bhdp,bhd->bhp", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    C0 = jnp.zeros((b, hh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, hh, dh), jnp.float32)
+    m0 = jnp.full((b, hh), -30.0, jnp.float32)
+    xs = (
+        q.transpose(2, 0, 1, 3).astype(jnp.float32),
+        k.transpose(2, 0, 1, 3).astype(jnp.float32),
+        v.transpose(2, 0, 1, 3).astype(jnp.float32),
+        ig.transpose(2, 0, 1).astype(jnp.float32),
+        lf.transpose(2, 0, 1).astype(jnp.float32),
+    )
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3).astype(q.dtype)

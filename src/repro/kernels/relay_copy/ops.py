@@ -1,0 +1,17 @@
+"""Jit'd wrapper for the staged relay copy."""
+
+from __future__ import annotations
+
+import jax
+
+from .ref import relay_copy_ref
+from .relay import relay_copy as _relay_pallas
+
+
+def relay_copy(x, *, block_chunk: int = 256):
+    return _relay_pallas(
+        x, block_chunk=block_chunk, interpret=jax.default_backend() != "tpu"
+    )
+
+
+__all__ = ["relay_copy", "relay_copy_ref"]

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: double-buffered staged chunk relay (§IV-C analogue).
+
+The paper's relay GPUs stream data through small P2P staging buffers,
+overlapping receive of chunk j+1 with forward of chunk j (counter-based
+flow control).  On TPU the inter-chip movement itself is a ppermute in the
+scheduled dataplane; what remains kernel-shaped is the *staging discipline*:
+move a large buffer through a small VMEM window, chunk by chunk, with two
+slots alternating so the inbound DMA of the next chunk overlaps the
+outbound store of the current one.
+
+This kernel implements exactly that: grid over chunks, a (2, bc, D) VMEM
+scratch, slot parity = program_id % 2.  Pallas double-buffers the HBM->VMEM
+block fetches automatically; the explicit scratch models the relay's
+fixed-size P2P buffer pool (10 MB/thread-block in the paper's setup) and is
+what a fused relay (recv-compute-send) kernel would build on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, buf):
+    slot = pl.program_id(0) % 2
+    buf[slot] = x_ref[...]          # "receive" into the staging slot
+    o_ref[...] = buf[slot]          # "forward" out of the staging slot
+
+
+@functools.partial(jax.jit, static_argnames=("block_chunk", "interpret"))
+def relay_copy(
+    x: jnp.ndarray, *, block_chunk: int = 256, interpret: bool = True
+) -> jnp.ndarray:
+    """Identity copy of [N, D] through a 2-slot VMEM staging pipeline."""
+    n, d = x.shape
+    bc = min(block_chunk, n)
+    assert n % bc == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // bc,),
+        in_specs=[pl.BlockSpec((bc, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bc, d), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((2, bc, d), x.dtype)],
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

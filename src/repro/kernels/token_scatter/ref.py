@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the token gather/scatter (pack) kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def token_gather_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = x[idx[i]] for idx[i] >= 0 else 0.   x: [N, D], idx: [M]."""
+    safe = jnp.clip(idx, 0, x.shape[0] - 1)
+    out = x[safe]
+    return jnp.where((idx >= 0)[:, None], out, 0).astype(x.dtype)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16,
+model=16) = 512 chips; the pod axis is pure data parallel (gradient
+all-reduce over DCI), the model axis hosts tensor/expert parallelism and is
+the NIMBLE orchestration axis (DESIGN.md §5).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import jax.sharding as jsh
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jsh.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n_devices: int | None = None, model: int | None = None):
+    """Small mesh over whatever devices exist (selftests, examples)."""
+    n = n_devices or len(jax.devices())
+    model = model or n
+    data = n // model
+    import jax.sharding as jsh
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jsh.AxisType.Auto,) * 2)

@@ -1,0 +1,133 @@
+"""Dense llama-family transformer (tinyllama / smollm / qwen2.5 / llama3).
+
+Pre-norm GQA + SwiGLU blocks, RoPE, optional QKV bias (qwen), optional
+sliding-window attention (the sub-quadratic variant that makes ``long_500k``
+runnable for dense archs — DESIGN.md §4).  Layers are stacked and scanned.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ParallelContext, SINGLE
+
+from . import layers as L
+
+
+def init(rng, cfg: ModelConfig, ctx: ParallelContext = SINGLE):
+    dt = ctx.param_dtype
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+
+    def init_block(r):
+        r1, r2 = jax.random.split(r)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": L.init_attention(
+                r1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                dt, cfg.qkv_bias,
+            ),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": L.init_swiglu(r2, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    blocks = jax.vmap(init_block)(jax.random.split(k_blocks, cfg.n_layers))
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+def _block_fwd(p, x, cfg: ModelConfig, window: Optional[int], pos_offset=0):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.attention_forward(
+        p["attn"], h,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, causal=True, window=window,
+        pos_offset=pos_offset,
+    )
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.swiglu(p["mlp"], h)
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head
+
+
+def forward(
+    params, tokens: jnp.ndarray, cfg: ModelConfig,
+    ctx: ParallelContext = SINGLE, *, window: Optional[int] = None,
+    inputs_embeds: Optional[jnp.ndarray] = None, last_only: bool = False,
+) -> jnp.ndarray:
+    """tokens [B, S] -> logits [B, S, V].  Full attention unless window.
+
+    ``last_only`` slices the hidden state to the final position BEFORE the
+    lm_head projection — prefill only needs the last logits, and projecting
+    the full sequence would all-reduce a [B, S, V] tensor across TP
+    (§Perf iteration B1: 448x smaller logits collective).
+    """
+    x = params["embed"][tokens] if inputs_embeds is None else inputs_embeds
+    x = x.astype(ctx.compute_dtype)
+    # §Perf PAIR D follow-up: pin batch to the data axes each layer —
+    # heads that don't divide the model axis (e.g. smollm's 9) otherwise
+    # make propagation replicate the full global batch per device.
+    from repro.sharding.context import constrain_tokens
+
+    def body(x, p):
+        x = constrain_tokens(x, ctx)
+        fn = _block_fwd
+        if ctx.remat:
+            fn = jax.checkpoint(fn, static_argnums=(2, 3))
+        return fn(p, x, cfg, window), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    if last_only:
+        x = x[:, -1:]
+    return _logits(params, x, cfg)
+
+
+# -- serving ---------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               ctx: ParallelContext = SINGLE):
+    def one(_):
+        return L.init_kv_cache(
+            batch, cfg.n_kv_heads, cache_len, cfg.head_dim, ctx.compute_dtype
+        )
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def decode_step(
+    params, cache, token: jnp.ndarray, pos: jnp.ndarray, cfg: ModelConfig,
+    ctx: ParallelContext = SINGLE,
+) -> Tuple[jnp.ndarray, dict]:
+    """token [B] int32, pos scalar -> (logits [B, V], cache')."""
+    x = params["embed"][token][:, None, :].astype(ctx.compute_dtype)
+
+    def body(x, pc):
+        p, c = pc
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, c = L.attention_decode(
+            p["attn"], h, c, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+        x = x + a
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(p["mlp"], h)
+        return x, c
+
+    x, cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    return _logits(params, x, cfg)[:, 0], cache

@@ -1,0 +1,194 @@
+"""Whisper-style encoder-decoder [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: the encoder consumes precomputed frame embeddings
+``frames [B, n_audio_frames, d]`` (what the conv stack would emit), adds
+sinusoidal positions, and runs bidirectional pre-LN attention blocks.  The
+decoder is causal self-attention + cross-attention to the encoder output.
+
+Serving: cross-attention K/V are computed once from the encoder output and
+held in the cache alongside the self-attention ring cache.  ``long_500k``
+is skipped for this arch (30 s context enc-dec; DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ParallelContext, SINGLE
+
+from . import layers as L
+
+
+def _attn_out(p, q, k, v, n_heads, head_dim, causal, pos_offset=0):
+    from repro.kernels.flash_attention.ops import attention
+    b, s, _ = q.shape
+    sk = k.shape[1]
+    qh = q.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    kh = k.reshape(b, sk, n_heads, head_dim).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, sk, n_heads, head_dim).transpose(0, 2, 1, 3)
+    o = attention(qh, kh, vh, causal, None, pos_offset)
+    return o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+
+
+def _init_xattn(rng, d, dtype):
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, d, dtype),
+        "wk": L.dense_init(ks[1], d, d, dtype),
+        "wv": L.dense_init(ks[2], d, d, dtype),
+        "wo": L.dense_init(ks[3], d, d, dtype),
+    }
+
+
+def init(rng, cfg: ModelConfig, ctx: ParallelContext = SINGLE):
+    dt = ctx.param_dtype
+    d = cfg.d_model
+    k_e, k_enc, k_dec, k_h = jax.random.split(rng, 4)
+
+    def enc_block(r):
+        r1, r2 = jax.random.split(r)
+        return {
+            "ln1": jnp.ones((d,), dt), "b_ln1": jnp.zeros((d,), dt),
+            "attn": _init_xattn(r1, d, dt),
+            "ln2": jnp.ones((d,), dt), "b_ln2": jnp.zeros((d,), dt),
+            "mlp": L.init_mlp(r2, d, cfg.d_ff, dt),
+        }
+
+    def dec_block(r):
+        r1, r2, r3 = jax.random.split(r, 3)
+        return {
+            "ln1": jnp.ones((d,), dt), "b_ln1": jnp.zeros((d,), dt),
+            "self_attn": _init_xattn(r1, d, dt),
+            "ln_x": jnp.ones((d,), dt), "b_ln_x": jnp.zeros((d,), dt),
+            "cross_attn": _init_xattn(r2, d, dt),
+            "ln2": jnp.ones((d,), dt), "b_ln2": jnp.zeros((d,), dt),
+            "mlp": L.init_mlp(r3, d, cfg.d_ff, dt),
+        }
+
+    return {
+        "embed": L.embed_init(k_e, cfg.vocab, d, dt),
+        "dec_pos": (jax.random.normal(k_h, (4096, d)) * 0.01).astype(dt),
+        "enc": jax.vmap(enc_block)(jax.random.split(k_enc, cfg.n_enc_layers)),
+        "dec": jax.vmap(dec_block)(jax.random.split(k_dec, cfg.n_layers)),
+        "enc_norm": jnp.ones((d,), dt), "b_enc_norm": jnp.zeros((d,), dt),
+        "dec_norm": jnp.ones((d,), dt), "b_dec_norm": jnp.zeros((d,), dt),
+    }
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig,
+           ctx: ParallelContext = SINGLE) -> jnp.ndarray:
+    """frames [B, F, d] (stub conv output) -> encoder states [B, F, d]."""
+    b, f, d = frames.shape
+    x = frames.astype(ctx.compute_dtype) + L.sinusoidal_positions(f, d).astype(
+        ctx.compute_dtype
+    )
+
+    def body(x, p):
+        h = L.layer_norm(x, p["ln1"], p["b_ln1"], cfg.norm_eps)
+        q, k, v = h @ p["attn"]["wq"], h @ p["attn"]["wk"], h @ p["attn"]["wv"]
+        x = x + _attn_out_proj(p["attn"], q, k, v, cfg)
+        h = L.layer_norm(x, p["ln2"], p["b_ln2"], cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.layer_norm(x, params["enc_norm"], params["b_enc_norm"],
+                        cfg.norm_eps)
+
+
+def _attn_out_proj(p, q, k, v, cfg, causal=False, pos_offset=0):
+    o = _attn_out(p, q, k, v, cfg.n_heads, cfg.head_dim, causal, pos_offset)
+    return o @ p["wo"]
+
+
+def decode(params, tokens: jnp.ndarray, enc_out: jnp.ndarray,
+           cfg: ModelConfig, ctx: ParallelContext = SINGLE,
+           last_only: bool = False) -> jnp.ndarray:
+    """tokens [B, S], enc_out [B, F, d] -> logits [B, S, V]."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(ctx.compute_dtype)
+    x = x + params["dec_pos"][:s].astype(ctx.compute_dtype)
+    # §Perf PAIR D follow-up: pin batch to the data axes (propagation was
+    # replicating the full global batch through the decoder stack).
+    from repro.sharding.context import constrain_tokens
+    x = constrain_tokens(x, ctx)
+
+    def body(x, p):
+        h = L.layer_norm(x, p["ln1"], p["b_ln1"], cfg.norm_eps)
+        q = h @ p["self_attn"]["wq"]
+        k = h @ p["self_attn"]["wk"]
+        v = h @ p["self_attn"]["wv"]
+        x = x + _attn_out_proj(p["self_attn"], q, k, v, cfg, causal=True)
+        h = L.layer_norm(x, p["ln_x"], p["b_ln_x"], cfg.norm_eps)
+        q = h @ p["cross_attn"]["wq"]
+        k = enc_out @ p["cross_attn"]["wk"]
+        v = enc_out @ p["cross_attn"]["wv"]
+        x = x + _attn_out_proj(p["cross_attn"], q, k, v, cfg, causal=False)
+        h = L.layer_norm(x, p["ln2"], p["b_ln2"], cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    if last_only:
+        x = x[:, -1:]                    # §Perf B1: slice before lm_head
+    x = L.layer_norm(x, params["dec_norm"], params["b_dec_norm"], cfg.norm_eps)
+    return x @ params["embed"].T     # whisper ties output to embedding
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx: ParallelContext = SINGLE,
+            *, frames=None, last_only: bool = False, **_):
+    assert frames is not None, "audio arch requires stub frame embeddings"
+    enc_out = encode(params, frames, cfg, ctx)
+    return decode(params, tokens, enc_out, cfg, ctx, last_only=last_only)
+
+
+# -- serving ---------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               ctx: ParallelContext = SINGLE, enc_out=None):
+    """Self-attn ring caches + precomputed cross K/V (needs enc_out)."""
+    self_c = jax.vmap(
+        lambda _: L.init_kv_cache(batch, cfg.n_heads, cache_len,
+                                  cfg.head_dim, ctx.compute_dtype)
+    )(jnp.arange(cfg.n_layers))
+    if enc_out is None:
+        f = cfg.n_audio_frames
+        enc_out = jnp.zeros((batch, f, cfg.d_model), ctx.compute_dtype)
+    return {"self": self_c, "enc_out": enc_out}
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig,
+                ctx: ParallelContext = SINGLE):
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :].astype(ctx.compute_dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], pos, 1, 0
+    ).astype(ctx.compute_dtype)
+    enc_out = cache["enc_out"]
+
+    def body(x, pc):
+        p, c = pc
+        h = L.layer_norm(x, p["ln1"], p["b_ln1"], cfg.norm_eps)
+        a, c = L.attention_decode(
+            p["self_attn"], h, c, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_heads, head_dim=cfg.head_dim,
+            rope_theta=None,
+        )
+        x = x + a
+        h = L.layer_norm(x, p["ln_x"], p["b_ln_x"], cfg.norm_eps)
+        q = h @ p["cross_attn"]["wq"]
+        k = enc_out @ p["cross_attn"]["wk"]
+        v = enc_out @ p["cross_attn"]["wv"]
+        x = x + _attn_out_proj(p["cross_attn"], q, k, v, cfg, causal=False)
+        h = L.layer_norm(x, p["ln2"], p["b_ln2"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h)
+        return x, c
+
+    x, self_c = jax.lax.scan(body, x, (params["dec"], cache["self"]))
+    x = L.layer_norm(x, params["dec_norm"], params["b_dec_norm"], cfg.norm_eps)
+    lg = (x @ params["embed"].T)[:, 0]
+    return lg, {"self": self_c, "enc_out": enc_out}

@@ -1,0 +1,176 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+Zamba2 [arXiv:2411.15242] interleaves a single *shared* full-attention
+(+MLP) block into a Mamba2 tower — the same attention parameters are reused
+at every invocation point (every ``cfg.attn_every`` layers).  We implement
+exactly that sharing; the per-invocation LoRA deltas of the released model
+are omitted (noted simplification, parameter-count-neutral at our scale).
+
+Layer schedule for n_layers=38, attn_every=6:
+  mamba x5, [shared attn], mamba x5, [shared attn], ... (6 invocations),
+  trailing mamba layers.  Mamba segments are scanned (stacked params);
+  attention invocations are unrolled (they share one param set).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ParallelContext, SINGLE
+
+from . import layers as L
+from . import ssm
+
+
+def layer_schedule(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """[('mamba', count), ('attn', 1), ...] — segments in order."""
+    per = max(cfg.attn_every, 1)
+    segs: List[Tuple[str, int]] = []
+    remaining = cfg.n_layers
+    while remaining > 0:
+        m = min(per - 1, remaining)
+        if m:
+            segs.append(("mamba", m))
+            remaining -= m
+        if remaining > 0:
+            segs.append(("attn", 1))
+            remaining -= 1
+    return segs
+
+
+def n_mamba_layers(cfg: ModelConfig) -> int:
+    return sum(c for kind, c in layer_schedule(cfg) if kind == "mamba")
+
+
+def init(rng, cfg: ModelConfig, ctx: ParallelContext = SINGLE):
+    dt = ctx.param_dtype
+    k_embed, k_m, k_a, k_h = jax.random.split(rng, 4)
+    n_m = n_mamba_layers(cfg)
+    mamba = jax.vmap(lambda k: ssm.init_mamba_block(k, cfg, dt))(
+        jax.random.split(k_m, n_m)
+    )
+    ka1, ka2 = jax.random.split(k_a)
+    shared_attn = {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(
+            ka1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dt
+        ),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "mlp": L.init_swiglu(ka2, cfg.d_model, cfg.d_ff, dt),
+    }
+    return {
+        "embed": L.embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+        "mamba": mamba,
+        "shared_attn": shared_attn,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": L.dense_init(k_h, cfg.d_model, cfg.vocab, dt),
+    }
+
+
+def _attn_block(p, x, cfg: ModelConfig, window=None, pos_offset=0):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.attention_forward(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        causal=True, window=window, pos_offset=pos_offset,
+    )
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.swiglu(p["mlp"], h)
+
+
+def _take(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx: ParallelContext = SINGLE,
+            *, window=None, last_only: bool = False):
+    x = params["embed"][tokens].astype(ctx.compute_dtype)
+    off = 0
+    for kind, count in layer_schedule(cfg):
+        if kind == "mamba":
+            seg = _take(params["mamba"], off, off + count)
+            off += count
+
+            def body(x, p):
+                fn = ssm.mamba_forward
+                if ctx.remat:
+                    fn = jax.checkpoint(fn, static_argnums=(2,))
+                return x + fn(p, x, cfg), None
+
+            x, _ = jax.lax.scan(body, x, seg)
+        else:
+            # the SHARED attention block — same params each invocation.
+            # Zamba2 uses full (not windowed) attention here; window only
+            # kicks in for the long_500k sub-quadratic mode.
+            # §Perf PAIR D: pin batch to the data axes around the block —
+            # propagation otherwise replicates the global batch per device.
+            from repro.sharding.context import constrain_tokens
+            x = constrain_tokens(x, ctx)
+            x = _attn_block(params["shared_attn"], x, cfg, window)
+            x = constrain_tokens(x, ctx)
+    if last_only:
+        x = x[:, -1:]                    # §Perf B1: slice before lm_head
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps) @ params["lm_head"]
+
+
+# -- serving ---------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               ctx: ParallelContext = SINGLE):
+    n_attn = sum(1 for k, _ in layer_schedule(cfg) if k == "attn")
+    n_m = n_mamba_layers(cfg)
+    mamba = jax.vmap(lambda _: ssm.init_mamba_cache(cfg, batch, ctx.compute_dtype))(
+        jnp.arange(n_m)
+    )
+    attn = jax.vmap(
+        lambda _: L.init_kv_cache(batch, cfg.n_kv_heads, cache_len,
+                                  cfg.head_dim, ctx.compute_dtype)
+    )(jnp.arange(n_attn))
+    return {"mamba": mamba, "attn": attn}
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig,
+                ctx: ParallelContext = SINGLE):
+    x = params["embed"][token][:, None, :].astype(ctx.compute_dtype)
+    m_off = 0
+    a_off = 0
+    new_m, new_a = [], []
+    for kind, count in layer_schedule(cfg):
+        if kind == "mamba":
+            seg = _take(params["mamba"], m_off, m_off + count)
+            cseg = _take(cache["mamba"], m_off, m_off + count)
+            m_off += count
+
+            def body(x, pc):
+                p, c = pc
+                y, c = ssm.mamba_decode(p, x, c, cfg)
+                return x + y, c
+
+            x, cs = jax.lax.scan(body, x, (seg, cseg))
+            new_m.append(cs)
+        else:
+            p = params["shared_attn"]
+            c = _take(cache["attn"], a_off, a_off + 1)
+            c1 = jax.tree.map(lambda a: a[0], c)
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            a, c1 = L.attention_decode(
+                p["attn"], h, c1, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            )
+            x = x + a
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + L.swiglu(p["mlp"], h)
+            new_a.append(jax.tree.map(lambda a: a[None], c1))
+            a_off += 1
+    cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_m),
+        "attn": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_a),
+    }
+    lg = L.rms_norm(x, params["final_norm"], cfg.norm_eps) @ params["lm_head"]
+    return lg[:, 0], cache

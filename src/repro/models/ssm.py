@@ -1,0 +1,198 @@
+"""Mamba2-style selective SSM blocks (zamba2 backbone; standalone SSM).
+
+Implements the SSD (state-space duality) recurrence with per-head scalar
+decay, chunked for training:
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t ⊗ x_t         (state [P, N])
+    y_t = C_t · h_t + D * x_t
+
+Training uses a chunk-parallel scan (intra-chunk cumulative decay + carried
+chunk states via ``lax.scan``) — O(S·N·P) instead of quadratic attention,
+which is what qualifies the hybrid/SSM archs for ``long_500k``.  Decode is
+the O(1) recurrent update on a carried state.
+
+NIMBLE applicability: none — the recurrence is sequence-local and the only
+collectives are balanced TP/DP (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ParallelContext, SINGLE
+
+from . import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    P = d_inner // H          # head channel dim
+    N = cfg.ssm_state         # state dim
+    return d_inner, H, P, N
+
+
+def init_mamba_block(rng, cfg: ModelConfig, dtype):
+    d_inner, H, P, N = _dims(cfg)
+    ks = jax.random.split(rng, 5)
+    # in_proj emits [z (gate), x, B, C, dt] fused as in Mamba2
+    d_in_proj = 2 * d_inner + 2 * N * H + H
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "in_proj": L.dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_inner)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": L.dense_init(ks[2], d_inner, cfg.d_model, dtype),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_inner, H, P, N = _dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + N * H, 2 * d_inner + 2 * N * H],
+        axis=-1,
+    )
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [K, C].  state: [B, K-1, C]."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, dt, B, C, A, D, chunk: int = 128):
+    """Chunk-parallel SSD scan.
+
+    x: [Bt, S, H, P]; dt: [Bt, S, H]; B, C: [Bt, S, H, N]; A: [H] (negative).
+    Returns y: [Bt, S, H, P].
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = nc * chunk
+    xc = x.reshape(Bt, nc, chunk, H, P)
+    dtc = dt.reshape(Bt, nc, chunk, H)
+    Bc = B.reshape(Bt, nc, chunk, H, N)
+    Cc = C.reshape(Bt, nc, chunk, H, N)
+
+    dA = dtc * A[None, None, None, :]                  # [Bt,nc,L,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk log decay
+    total = cum[:, :, -1]                              # [Bt,nc,H]
+
+    # intra-chunk (quadratic within chunk, causal)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [Bt,nc,Li,Lj,H]
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+    # mask BEFORE exp: non-causal entries have seg >= 0 (cum is decreasing),
+    # exp would overflow and where()'s grad turns inf*0 into NaN.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    G = jnp.einsum("bclhn,bcmhn->bclmh", Cc, Bc)          # [Bt,nc,Li,Lj,H]
+    M = G * decay
+    y_intra = jnp.einsum("bclmh,bcmh,bcmhp->bclhp", M, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) * dt_j * B_j x_j^T
+    w = jnp.exp(total[:, :, None, :] - cum) * dtc          # [Bt,nc,L,H]
+    states = jnp.einsum("bclh,bclhn,bclhp->bchnp", w, Bc, xc)
+
+    # inter-chunk recurrence over carried state
+    def scan_fn(h, inp):
+        st, tot = inp                                       # [Bt,H,N,P],[Bt,H]
+        h_out = h
+        h = h * jnp.exp(tot)[:, :, None, None] + st
+        return h, h_out
+
+    h0 = jnp.zeros((Bt, H, N, P), x.dtype)
+    _, h_prev = jax.lax.scan(
+        scan_fn,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)               # [Bt,nc,H,N,P]
+    y_inter = jnp.einsum(
+        "bclhn,bclh,bchnp->bclhp", Cc, jnp.exp(cum), h_prev
+    )
+    y = (y_intra + y_inter).reshape(Bt, Sp, H, P)[:, :S]
+    return y + x.reshape(Bt, Sp, H, P)[:, :S] * D[None, None, :, None]
+
+
+def mamba_forward(p, x, cfg: ModelConfig):
+    """x: [B, S, D] -> [B, S, D] (residual applied by caller)."""
+    d_inner, H, P, N = _dims(cfg)
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xi, Bv, Cv, dt = _split_proj(zxbcdt, cfg)
+    xi, _ = _causal_conv(xi, p["conv_w"][:, :d_inner], p["conv_b"], None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    Bt, S = x.shape[:2]
+    y = _ssd_chunked(
+        xi.reshape(Bt, S, H, P).astype(jnp.float32),
+        dt,
+        Bv.reshape(Bt, S, H, N).astype(jnp.float32),
+        Cv.reshape(Bt, S, H, N).astype(jnp.float32),
+        A,
+        p["D"],
+    ).reshape(Bt, S, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# -- decode ------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, H, P, N = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig):
+    """x: [B, 1, D]; O(1) recurrent update."""
+    d_inner, H, P, N = _dims(cfg)
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xi, Bv, Cv, dt = _split_proj(zxbcdt, cfg)
+    xi, conv_state = _causal_conv(
+        xi, p["conv_w"][:, :d_inner], p["conv_b"], cache["conv"]
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xi[:, 0].reshape(-1, H, P).astype(jnp.float32)
+    Bh = Bv[:, 0].reshape(-1, H, N).astype(jnp.float32)
+    Ch = Cv[:, 0].reshape(-1, H, N).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                                   # [B,H]
+    hs = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, hs) + xh * p["D"][None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": hs}

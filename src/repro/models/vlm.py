@@ -1,0 +1,52 @@
+"""InternVL2-style VLM [arXiv:2404.16821]: vision stub + InternLM2 backbone.
+
+The InternViT encoder + MLP projector is a STUB per the assignment
+carve-out: ``patches [B, n_patches, d]`` arrive as precomputed projected
+patch embeddings.  The language model is the dense llama-family backbone
+(GQA kv=8); image tokens are prepended to the text sequence (the standard
+``<img>...</img>`` interleave collapsed to a prefix, uniform across the
+batch so shapes stay static).
+
+Decode: the patch prefix is prefilled into the KV cache; token positions
+are offset by ``n_patches``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import ParallelContext, SINGLE
+
+from . import dense
+from . import layers as L
+
+
+def init(rng, cfg: ModelConfig, ctx: ParallelContext = SINGLE):
+    return dense.init(rng, cfg, ctx)
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx: ParallelContext = SINGLE,
+            *, patches=None, window=None, last_only: bool = False, **_):
+    """tokens [B, S_text], patches [B, P, d] -> logits [B, P+S_text, V]."""
+    assert patches is not None, "vlm arch requires stub patch embeddings"
+    tok_emb = params["embed"][tokens]
+    x = jnp.concatenate(
+        [patches.astype(tok_emb.dtype), tok_emb], axis=1
+    )
+    return dense.forward(params, tokens, cfg, ctx, window=window,
+                         inputs_embeds=x, last_only=last_only)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               ctx: ParallelContext = SINGLE):
+    return dense.init_cache(cfg, batch, cache_len, ctx)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig,
+                ctx: ParallelContext = SINGLE):
+    """pos is the absolute position INCLUDING the patch prefix."""
+    return dense.decode_step(params, cache, token, pos, cfg, ctx)

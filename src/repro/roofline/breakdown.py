@@ -1,0 +1,139 @@
+"""Per-instruction byte/FLOP breakdown of a dry-run lowering (§Perf tooling).
+
+    PYTHONPATH=src python -m repro.roofline.breakdown --arch xlstm-125m \
+        --shape train_4k [--set mlstm_chunk=64] [--top 20]
+
+Prints the top-N byte-contributing top-level instructions (trip-count- and
+slice-aware, same accounting as the roofline) with their op_name metadata,
+so the dominant roofline term can be attributed to model code.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+from collections import defaultdict
+
+from . import hlo_cost as hc
+
+
+def breakdown(text: str):
+    m = hc.HloModule(text)
+    rows = []
+
+    def comp_cost(comp, mult, top):
+        for ins in m.computations.get(comp, []):
+            op = ins.opcode
+            if op == "while":
+                body = hc._attr(ins.raw, "body")
+                cond = hc._attr(ins.raw, "condition")
+                trip = m.while_trip_count(cond) if cond else None
+                if trip is None:
+                    trip = 1
+                if body:
+                    comp_cost(body, mult * trip, top)
+            if top and op not in hc._SKIP_BYTES_OPS:
+                b = (m._fusion_bytes(ins) if op == "fusion"
+                     else m._plain_op_bytes(ins)) * mult
+                rows.append((b, mult, ins))
+
+    comp_cost(m.entry, 1.0, True)
+    rows.sort(key=lambda r: -r[0])
+    return m, rows
+
+
+def opname(ins) -> str:
+    mm = re.search(r'op_name="([^"]*)"', ins.raw)
+    return mm.group(1) if mm else "?"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-mode", default="nimble")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--set-ctx", action="append", default=[])
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    def _parse(items):
+        out = {}
+        for it in items:
+            k, v = it.split("=", 1)
+            for cast in (int, float):
+                try:
+                    v = cast(v)
+                    break
+                except ValueError:
+                    pass
+            if v in ("True", "true"):
+                v = True
+            elif v in ("False", "false"):
+                v = False
+            out[k] = v
+        return out
+
+    texts = []
+    orig = hc.analyze_hlo_text
+    hc.analyze_hlo_text = lambda t: (texts.append(t), orig(t))[1]
+    from repro.launch.dryrun import run_one
+
+    rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                  moe_mode=args.moe_mode, cfg_overrides=_parse(args.set),
+                  ctx_overrides=_parse(args.set_ctx))
+    ro = rec["roofline"]
+    print(f"{args.arch} x {args.shape}: dom={ro['dominant']} "
+          f"comp={ro['compute_s']:.3e}s mem={ro['memory_s']:.3e}s "
+          f"coll={ro['collective_s']:.3e}s")
+
+    m, rows = breakdown(texts[0])
+    total = sum(r[0] for r in rows)
+    print(f"\ntop {args.top} byte contributors (of {total:.3e} bytes):")
+    for b, mult, ins in rows[: args.top]:
+        print(f"  {b:10.3e} ({100 * b / total:5.1f}%) x{mult:<6.0f} "
+              f"{ins.opcode:22s} {ins.type_str[:42]:42s} {opname(ins)[:70]}")
+
+    # collectives: top instructions with attribution
+    crows = []
+
+    def coll_walk(comp, mult):
+        for ins in m.computations.get(comp, []):
+            if ins.opcode == "while":
+                body = hc._attr(ins.raw, "body")
+                cond = hc._attr(ins.raw, "condition")
+                trip = m.while_trip_count(cond) if cond else None
+                if trip is None:
+                    trip = 1
+                if body:
+                    coll_walk(body, mult * trip)
+            for kind in hc._COLLECTIVES:
+                if ins.opcode == kind or ins.opcode.startswith(kind + "-start"):
+                    b = sum(m.instr[o].result_bytes for o in ins.operands
+                            if o in m.instr) or ins.result_bytes
+                    crows.append((b * mult, mult, kind, ins))
+                    break
+
+    coll_walk(m.entry, 1.0)
+    crows.sort(key=lambda r: -r[0])
+    print(f"\ntop collectives ({sum(r[0] for r in crows):.3e} bytes total):")
+    for b, mult, kind, ins in crows[: args.top]:
+        print(f"  {b:10.3e} x{mult:<6.0f} {kind:20s} {ins.type_str[:38]:38s} "
+              f"{opname(ins)[:60]}")
+
+    # also aggregate by op_name prefix (model-code attribution)
+    agg = defaultdict(float)
+    for b, mult, ins in rows:
+        name = opname(ins)
+        key = "/".join(name.split("/")[:4]) if name != "?" else "?"
+        agg[key] += b
+    print("\nby op_name prefix:")
+    for k, v in sorted(agg.items(), key=lambda x: -x[1])[:15]:
+        print(f"  {v:10.3e} ({100 * v / total:5.1f}%)  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,343 @@
+"""HLO-text cost model with while-loop trip-count multiplication.
+
+``compiled.cost_analysis()`` (xla::HloCostAnalysis) counts a while-loop body
+ONCE — our models scan layers (94x), sequence steps (4096x) and kv chunks
+(32x), so stock numbers are off by orders of magnitude.  This module parses
+the optimized post-SPMD HLO text and recomputes:
+
+  * **flops** — dot ops (2 x result_elems x contracted_elems), multiplied by
+    the product of enclosing while trip counts;
+  * **bytes** — operand+result bytes of top-level (post-fusion) ops, i.e.
+    fusion-boundary HBM traffic, with the same multipliers;
+  * **collective bytes** — per collective kind, operand bytes x multipliers.
+
+Trip counts come from each while's condition computation (the canonical
+``compare(gte(param), constant(N)), direction=LT`` pattern); unknown
+conditions conservatively count once and are reported in ``unknown_loops``.
+
+Validated in tests against analytic FLOPs of a scanned transformer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "conditional",
+    "call",
+}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    raw: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.type_str)
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)+)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
+
+
+def _split_operands(argstr: str) -> List[str]:
+    """Operand instruction names from the call-args portion of a line."""
+    depth = 1
+    core = ""
+    for ch in argstr:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        core += ch
+    return re.findall(r"%([\w.\-]+)", core)
+
+
+def _attr(raw: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", raw)
+    return m.group(1) if m else None
+
+
+def _attr_list(raw: str, key: str) -> List[int]:
+    m = re.search(key + r"=\{([0-9, ]*)\}", raw)
+    if not m:
+        return []
+    return [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.instr: Dict[str, Instr] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        comment_re = re.compile(r"/\*.*?\*/")
+        for line in text.splitlines():
+            line = comment_re.sub("", line)
+            mc = _COMP_RE.match(line)
+            if mc and "=" not in line.split("->")[0]:
+                cur = mc.group(2)
+                self.computations[cur] = []
+                if mc.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                continue
+            mi = _INSTR_RE.match(line)
+            if mi:
+                name, tstr, opcode, rest = mi.groups()
+                ins = Instr(name, tstr, opcode, _split_operands(rest), line)
+                self.computations[cur].append(ins)
+                self.instr[name] = ins
+        if self.entry is None and self.computations:
+            # entry is usually last
+            self.entry = list(self.computations)[-1]
+
+    # -- trip counts -----------------------------------------------------------
+    def while_trip_count(self, cond_comp: str) -> Optional[int]:
+        """Trip count from the while condition.
+
+        XLA canonicalizes counted loops to ``lt(induction, constant(N))``
+        with the compare frequently wrapped in a kLoop fusion, so the robust
+        extraction is: the largest integer constant in the condition
+        computation.  (Induction variables start at 0 in XLA-canonical
+        loops; non-counted conditions return None and are reported.)"""
+        instrs = self.computations.get(cond_comp, [])
+        consts: List[int] = []
+        has_compare = False
+        for ins in instrs:
+            if ins.opcode == "constant":
+                m = re.search(r"constant\((-?\d+)\)", ins.raw)
+                if m:
+                    consts.append(int(m.group(1)))
+            if ins.opcode in ("compare", "fusion"):
+                has_compare = True
+        if has_compare and consts:
+            return max(max(consts), 0)
+        return None
+
+    # -- slice-accurate fusion byte accounting ----------------------------------
+    def _fusion_bytes(self, ins: Instr) -> float:
+        """HBM bytes of a top-level fusion, slice-accurate.
+
+        XLA aliases while-loop buffers in place, so a kLoop fusion that
+        dynamic-update-slices one time-step into a stacked [T, ...] buffer
+        touches ~2x the slice, not 2x the buffer.  Per fusion parameter:
+
+          * consumed only by dynamic-slice  -> charge the slice(s) read;
+          * consumed only as the updated operand of dynamic-update-slice
+            -> charge 0 reads (aliased in-place write);
+          * otherwise -> full parameter bytes.
+
+        The write side is the update size when the root is a DUS (possibly
+        behind bitcasts), else the full result.
+        """
+        called = _attr(ins.raw, "calls")
+        body = self.computations.get(called or "", [])
+        if not body:
+            return float(
+                sum(self.instr[o].result_bytes for o in ins.operands
+                    if o in self.instr) + ins.result_bytes
+            )
+        by_name = {b.name: b for b in body}
+        params: List[Instr] = [b for b in body if b.opcode == "parameter"]
+        # resolve bitcast chains: map name -> canonical source param (if any)
+        def canon(name: str) -> Optional[str]:
+            seen = 0
+            while name in by_name and seen < 10:
+                b = by_name[name]
+                if b.opcode == "parameter":
+                    return name
+                if b.opcode in ("bitcast", "copy", "reshape") and b.operands:
+                    name = b.operands[0]
+                    seen += 1
+                    continue
+                return None
+            return None
+
+        # classify every use of every parameter
+        reads: Dict[str, float] = {p.name: 0.0 for p in params}
+        full: Dict[str, bool] = {p.name: False for p in params}
+        for b in body:
+            if b.opcode == "parameter":
+                continue
+            for oi, o in enumerate(b.operands):
+                src = canon(o)
+                if src is None or src not in reads:
+                    continue
+                if b.opcode == "dynamic-slice" and oi == 0:
+                    reads[src] += b.result_bytes
+                elif b.opcode == "dynamic-update-slice" and oi == 0:
+                    pass  # aliased in-place destination: no read
+                elif b.opcode in ("bitcast", "copy", "reshape"):
+                    pass  # accounted at the chain's consumer via canon()
+                else:
+                    full[src] = True
+        read_bytes = 0.0
+        # parameter order corresponds to fusion operand order
+        for i, p in enumerate(params):
+            opnd = ins.operands[i] if i < len(ins.operands) else None
+            pbytes = (self.instr[opnd].result_bytes
+                      if opnd in self.instr else p.result_bytes)
+            if full[p.name]:
+                read_bytes += pbytes
+            else:
+                read_bytes += min(reads[p.name], pbytes)
+        # write side: root DUS writes only the update region
+        root = body[-1]
+        seen = 0
+        while root.opcode in ("bitcast", "copy", "reshape") and root.operands \
+                and root.operands[0] in by_name and seen < 10:
+            root = by_name[root.operands[0]]
+            seen += 1
+        if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+            upd = by_name.get(root.operands[1])
+            write_bytes = float(upd.result_bytes if upd else ins.result_bytes)
+        else:
+            write_bytes = float(ins.result_bytes)
+        return read_bytes + write_bytes
+
+    def _plain_op_bytes(self, ins: Instr) -> float:
+        """Top-level non-fusion op bytes (slice-aware for DS/DUS)."""
+        if ins.opcode == "dynamic-slice":
+            small = sum(self.instr[o].result_bytes for o in ins.operands[1:]
+                        if o in self.instr)
+            return float(2 * ins.result_bytes + small)
+        if ins.opcode == "dynamic-update-slice" and len(ins.operands) > 1:
+            upd = self.instr.get(ins.operands[1])
+            ub = upd.result_bytes if upd else ins.result_bytes
+            return float(2 * ub)
+        opnd = sum(self.instr[o].result_bytes for o in ins.operands
+                   if o in self.instr)
+        return float(opnd + ins.result_bytes)
+
+    # -- dot flops ----------------------------------------------------------------
+    def _dot_flops(self, ins: Instr, comp: str) -> float:
+        result_elems = 1
+        for _, dims in _shape_dims(ins.type_str):
+            for d in dims:
+                result_elems *= d
+        lhs = self.instr.get(ins.operands[0]) if ins.operands else None
+        contracted = 1
+        if lhs is not None:
+            ldims = _shape_dims(lhs.type_str)
+            if ldims:
+                dims = ldims[0][1]
+                for ci in _attr_list(ins.raw, "lhs_contracting_dims"):
+                    if ci < len(dims):
+                        contracted *= dims[ci]
+        return 2.0 * result_elems * contracted
+
+    # -- walk ------------------------------------------------------------------------
+    def analyze(self) -> Dict:
+        flops = 0.0
+        bytes_ = 0.0
+        coll = {k: 0.0 for k in _COLLECTIVES}
+        unknown_loops = 0
+        visited_stack = set()
+
+        def comp_cost(comp: str, mult: float, top_level: bool):
+            nonlocal flops, bytes_, coll, unknown_loops
+            if comp in visited_stack:          # defensive (no recursion in HLO)
+                return
+            visited_stack.add(comp)
+            for ins in self.computations.get(comp, []):
+                op = ins.opcode
+                if op == "dot":
+                    flops += self._dot_flops(ins, comp) * mult
+                if op == "while":
+                    body = _attr(ins.raw, "body")
+                    cond = _attr(ins.raw, "condition")
+                    trip = self.while_trip_count(cond) if cond else None
+                    if trip is None:
+                        trip = 1
+                        unknown_loops += 1
+                    if body:
+                        comp_cost(body, mult * trip, top_level)
+                    if cond:
+                        comp_cost(cond, mult * trip, False)
+                elif op == "fusion":
+                    called = _attr(ins.raw, "calls")
+                    if called:
+                        comp_cost(called, mult, False)  # dots inside fusions
+                elif op in ("call", "conditional", "custom-call"):
+                    for key in ("to_apply", "calls", "true_computation",
+                                "false_computation", "branch_computations"):
+                        called = _attr(ins.raw, key)
+                        if called:
+                            comp_cost(called, mult, False)
+                # collective bytes (operand sizes)
+                for kind in _COLLECTIVES:
+                    if op == kind or op.startswith(kind + "-start"):
+                        b = sum(
+                            self.instr[o].result_bytes
+                            for o in ins.operands if o in self.instr
+                        ) or ins.result_bytes
+                        coll[kind] += b * mult
+                        break
+                # HBM traffic at fusion boundaries (top-level ops only),
+                # slice-accurate for scan-body DUS/DS patterns
+                if top_level and op not in _SKIP_BYTES_OPS:
+                    if op == "fusion":
+                        bytes_ += self._fusion_bytes(ins) * mult
+                    else:
+                        bytes_ += self._plain_op_bytes(ins) * mult
+            visited_stack.discard(comp)
+
+        if self.entry:
+            comp_cost(self.entry, 1.0, True)
+        return {
+            "flops": flops,
+            "bytes": bytes_,
+            "collectives": coll,
+            "collective_bytes": sum(coll.values()),
+            "unknown_loops": unknown_loops,
+        }
+
+
+def analyze_hlo_text(text: str) -> Dict:
+    return HloModule(text).analyze()

@@ -1,0 +1,34 @@
+"""Train step factory: value_and_grad + AdamW update + metrics."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim import adamw
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig, *,
+                    window=None):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, window=window)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = adamw.update(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, *, window=None):
+    def eval_step(params, batch):
+        return model.loss(params, batch, window=window)
+    return eval_step

@@ -1,0 +1,49 @@
+"""Examples must stay runnable — executed as subprocesses with reduced
+workloads (quickstart and the dataplane demo are already fast; the training
+example runs a handful of steps)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, *args, timeout=560, extra_env=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)  # each example sets its own
+    if extra_env:
+        env.update(extra_env)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    assert r.returncode == 0, f"{script} failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.timeout(600)
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "speedup" in out and "finite=True" in out
+
+
+@pytest.mark.timeout(600)
+def test_skewed_alltoallv():
+    out = _run("skewed_alltoallv.py")
+    assert "all modes bit-exact vs oracle" in out
+
+
+@pytest.mark.timeout(600)
+def test_train_moe_nimble_short():
+    out = _run("train_moe_nimble.py", "--steps", "25")
+    assert "improved" in out
+
+
+@pytest.mark.timeout(600)
+def test_serve_multiarch():
+    out = _run("serve_multiarch.py")
+    assert "all families served" in out

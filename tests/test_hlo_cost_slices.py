@@ -1,0 +1,96 @@
+"""Regression tests for slice-accurate HLO byte accounting (§Dry-run
+caveat 3): scan-body DUS fusions must charge ~the slice, not the full
+stacked buffer x trip count."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_cost import analyze_hlo_text
+
+
+def _lower_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_stack_bytes_not_trip_inflated():
+    """Stacking scan: writes S slices of [N] into [S, N] — total bytes must
+    be O(S*N), not O(S^2 * N) (the pre-fix behaviour)."""
+    S, N = 512, 256
+
+    def f(x):
+        def step(c, _):
+            c = c * 1.000001
+            return c, c
+        _, ys = jax.lax.scan(step, x, None, length=S)
+        return ys
+
+    r = analyze_hlo_text(_lower_text(f, jnp.ones((N,), jnp.float32)))
+    total = S * N * 4
+    # generous bound: a few full passes of the stacked buffer, NOT S passes
+    assert r["bytes"] < 32 * total, (
+        f"scan DUS charged {r['bytes']:.2e} B; slice-accurate bound "
+        f"{32 * total:.2e}"
+    )
+    assert r["bytes"] > total  # and not absurdly low either
+
+
+def test_gather_scan_reads_slices():
+    """A scan that dynamic-slices one row of a big constant per step reads
+    O(S*row), not O(S*table)."""
+    S, R, C = 256, 1024, 128
+    table = jnp.ones((R, C), jnp.float32)
+
+    def f(idx):
+        def step(c, i):
+            row = jax.lax.dynamic_slice_in_dim(table, i, 1, 0)
+            return c + row.sum(), None
+        out, _ = jax.lax.scan(step, 0.0, idx)
+        return out
+
+    r = analyze_hlo_text(_lower_text(f, jnp.zeros((S,), jnp.int32)))
+    table_bytes = R * C * 4
+    assert r["bytes"] < 24 * table_bytes, (
+        f"per-step dynamic-slice charged {r['bytes']:.2e} B "
+        f"(full-table x trips would be {S * table_bytes:.2e})"
+    )
+
+
+def test_while_trip_counts_multiply_flops():
+    """Dots inside a scanned layer must be counted trip-count times."""
+    L, D = 8, 64
+    w = jnp.ones((L, D, D), jnp.float32)
+
+    def f(x):
+        def step(x, wi):
+            return x @ wi, None
+        y, _ = jax.lax.scan(step, x, w)
+        return y
+
+    r = analyze_hlo_text(_lower_text(f, jnp.ones((4, D), jnp.float32)))
+    expected = L * 2 * 4 * D * D
+    assert r["flops"] >= expected * 0.9, (
+        f"scan dots undercounted: {r['flops']:.2e} vs {expected:.2e}"
+    )
+    assert r["flops"] < expected * 3
+
+
+def test_collective_bytes_parsed():
+    """ppermute bytes appear in the collective breakdown."""
+    import os
+    mesh_devs = jax.devices()
+    if len(mesh_devs) < 1:
+        return
+    # single-device: lower with shard_map over a 1-device mesh still emits
+    # collective-permute in the HLO text only with >1 devices; instead just
+    # check the parser on a synthetic snippet.
+    text = """
+HloModule m
+
+ENTRY %main (p0: f32[128,64]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  ROOT %cp = f32[128,64]{1,0} collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+}
+"""
+    r = analyze_hlo_text(text)
+    assert r["collectives"]["collective-permute"] == 128 * 64 * 4

@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash import flash_attention
+from repro.kernels.flash_attention.ops import chunked_attention
+from repro.kernels.flash_attention.ref import mha_ref
+from repro.kernels.grouped_ffn.ffn import grouped_ffn_blocked
+from repro.kernels.grouped_ffn.ops import grouped_ffn, grouped_ffn_scan
+from repro.kernels.grouped_ffn.ref import grouped_ffn_ref
+from repro.kernels.relay_copy.relay import relay_copy
+from repro.kernels.token_scatter.ops import token_gather
+from repro.kernels.token_scatter.ref import token_gather_ref
+
+RNG = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------- #
+# token gather (kernel scatter)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+@pytest.mark.parametrize("n,m,d", [(64, 100, 32), (16, 16, 128), (128, 7, 8)])
+def test_token_gather(n, m, d, dtype):
+    x = RNG.normal(size=(n, d)).astype(dtype)
+    idx = RNG.integers(-1, n, size=(m,)).astype(np.int32)
+    out = token_gather(jnp.asarray(x), jnp.asarray(idx))
+    ref = token_gather_ref(jnp.asarray(x), jnp.asarray(idx))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+def test_token_gather_grad_is_scatter_add():
+    x = RNG.normal(size=(32, 8)).astype(np.float32)
+    idx = np.array([0, 0, 1, 5, 31, -1], np.int32)
+    g = jax.grad(lambda x: token_gather(x, jnp.asarray(idx)).sum())(
+        jnp.asarray(x)
+    )
+    expect = np.zeros_like(x)
+    for i in idx:
+        if i >= 0:
+            expect[i] += 1
+    np.testing.assert_allclose(np.asarray(g), expect)
+
+
+# --------------------------------------------------------------------------- #
+# grouped FFN
+# --------------------------------------------------------------------------- #
+
+
+def _ffn_inputs(N, D, F, E, dtype=np.float32):
+    x = (RNG.normal(size=(N, D)) * 0.1).astype(dtype)
+    eid = RNG.integers(-1, E, size=(N,)).astype(np.int32)
+    wg = (RNG.normal(size=(E, D, F)) * 0.05).astype(dtype)
+    wu = (RNG.normal(size=(E, D, F)) * 0.05).astype(dtype)
+    wd = (RNG.normal(size=(E, F, D)) * 0.05).astype(dtype)
+    return map(jnp.asarray, (x, eid, wg, wu, wd))
+
+
+@pytest.mark.parametrize("N,D,F,E,bt,bf", [
+    (128, 32, 64, 2, 32, 32),
+    (200, 64, 128, 4, 32, 64),
+    (64, 16, 32, 8, 16, 16),
+])
+def test_grouped_ffn_pallas(N, D, F, E, bt, bf):
+    x, eid, wg, wu, wd = _ffn_inputs(N, D, F, E)
+    y = grouped_ffn(x, eid, wg, wu, wd, block_tokens=bt, block_ffn=bf)
+    ref = grouped_ffn_ref(x, eid, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_grouped_ffn_scan_matches_ref():
+    x, eid, wg, wu, wd = _ffn_inputs(700, 32, 64, 4)
+    y = grouped_ffn_scan(x, eid, wg, wu, wd, block_tokens=64)
+    ref = grouped_ffn_ref(x, eid, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_grouped_ffn_bf16():
+    x, eid, wg, wu, wd = _ffn_inputs(96, 32, 64, 2, np.float32)
+    x = x.astype(jnp.bfloat16)
+    y = grouped_ffn(x, eid, wg, wu, wd, block_tokens=32, block_ffn=32)
+    ref = grouped_ffn_ref(x, eid, wg, wu, wd)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(ref, np.float32),
+        rtol=2e-2, atol=2e-3,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("window", [None, 96, 256])
+@pytest.mark.parametrize("B,H,Hkv,S,Dh", [
+    (2, 4, 2, 256, 64), (1, 2, 1, 128, 32), (1, 8, 8, 256, 16),
+])
+def test_flash_vs_ref(B, H, Hkv, S, Dh, window):
+    q = (RNG.normal(size=(B, H, S, Dh)) * 0.3).astype(np.float32)
+    k = (RNG.normal(size=(B, Hkv, S, Dh)) * 0.3).astype(np.float32)
+    v = (RNG.normal(size=(B, Hkv, S, Dh)) * 0.3).astype(np.float32)
+    o = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=True, window=window, bq=128, bk=128,
+                        interpret=True)
+    r = mha_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("window", [None, 100])
+def test_chunked_attention_vs_ref(window):
+    B, H, Hkv, Sq, Sk, Dh = 1, 4, 2, 64, 384, 32
+    q = (RNG.normal(size=(B, H, Sq, Dh)) * 0.3).astype(np.float32)
+    k = (RNG.normal(size=(B, Hkv, Sk, Dh)) * 0.3).astype(np.float32)
+    v = (RNG.normal(size=(B, Hkv, Sk, Dh)) * 0.3).astype(np.float32)
+    o = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=False, window=window, chunk=100)
+    r = mha_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                causal=False, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_flash_decode_offset():
+    """q_offset (decode position) shifts causal masking correctly."""
+    B, H, S, Dh = 1, 2, 128, 32
+    q = (RNG.normal(size=(B, H, 8, Dh)) * 0.3).astype(np.float32)
+    k = (RNG.normal(size=(B, H, S, Dh)) * 0.3).astype(np.float32)
+    v = (RNG.normal(size=(B, H, S, Dh)) * 0.3).astype(np.float32)
+    o = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=True, q_offset=64, chunk=64)
+    r = mha_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                causal=True, q_offset=64)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-6)
+
+
+# --------------------------------------------------------------------------- #
+# relay copy
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("n,d,bc", [(1024, 64, 256), (512, 128, 64),
+                                    (256, 32, 256)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_relay_copy(n, d, bc, dtype):
+    if dtype == np.int32:
+        x = RNG.integers(-100, 100, size=(n, d)).astype(dtype)
+    else:
+        x = RNG.normal(size=(n, d)).astype(dtype)
+    out = relay_copy(jnp.asarray(x), block_chunk=bc, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), x)

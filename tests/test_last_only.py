@@ -1,0 +1,39 @@
+"""§Perf B1: last_only prefill logits must equal the full forward's last
+position, for every architecture family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.data.pipeline import DataConfig, SyntheticLM, add_modality_stubs
+from repro.models.registry import build_model
+from repro.sharding.context import SINGLE
+
+# one representative per family
+FAMILY_REPS = [
+    "smollm-135m",            # dense
+    "granite-moe-1b-a400m",   # moe
+    "zamba2-1.2b",            # hybrid
+    "xlstm-125m",             # ssm
+    "whisper-small",          # audio (enc-dec)
+    "internvl2-2b",           # vlm
+]
+
+
+@pytest.mark.parametrize("arch", FAMILY_REPS)
+def test_last_only_matches_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, SINGLE)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=24,
+                                  global_batch=2, seed=0))
+    batch = add_modality_stubs(data.batch(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    full, _ = model.forward(params, batch)
+    last, _ = model.forward(params, batch, last_only=True)
+    assert last.shape[1] == 1
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0]), np.asarray(full[:, -1]), rtol=2e-4, atol=2e-5
+    )

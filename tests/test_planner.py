@@ -1,0 +1,96 @@
+"""Jittable MWU planner: quality vs the host solver + quantization props."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, ResourceModel
+from repro.core.dataplane import build_rel_of_pair
+from repro.core.mcf import solve_mwu
+from repro.core.planner import PlannerConfig, plan_flows, quantize_chunks
+from repro.core.schedule import build_planner_tables, build_schedule
+from repro.core.topology import Topology
+
+MB = 1 << 20
+
+
+def _tables(n=8, G=4):
+    return Topology(n, group_size=G)
+
+
+def test_planner_matches_host_quality():
+    """Parallel jnp MWU reaches within 25% of sequential host-solver Z."""
+    t = _tables()
+    tables = build_planner_tables(t)
+    rm = ResourceModel(t)
+    rng = np.random.default_rng(0)
+    D = rng.integers(0, 128, size=(8, 8)).astype(np.float32) * MB
+    np.fill_diagonal(D, 0)
+    cfg = PlannerConfig(chunk_bytes=float(MB), n_iters=32)
+    flows, loads = jax.jit(lambda d: plan_flows(d, tables, cfg))(jnp.asarray(D))
+    flows = np.asarray(flows)
+    # all demand routed
+    np.testing.assert_allclose(flows.sum(-1), D, rtol=1e-5)
+    z_jnp = float(np.max(np.asarray(loads) / tables.caps))
+    host = solve_mwu(t, {(s, d): float(D[s, d]) for s in range(8)
+                         for d in range(8) if D[s, d] > 0}, eps=1 * MB)
+    z_host = host.max_normalized_load()
+    assert z_jnp <= z_host * 1.25
+
+
+def test_planner_small_messages_direct():
+    t = _tables()
+    tables = build_planner_tables(t)
+    D = np.full((8, 8), 0.5 * MB, np.float32)
+    np.fill_diagonal(D, 0)
+    cfg = PlannerConfig(chunk_bytes=float(MB) / 4)
+    flows, _ = plan_flows(jnp.asarray(D), tables, cfg)
+    flows = np.asarray(flows)
+    # relay candidates (k>0 for intra rels means relays; inter k=0 is the
+    # least-hop PXN path): all flow must sit on k=0
+    assert flows[..., 1:].sum() == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantization_exact_and_capped(seed):
+    t = _tables()
+    sched = build_schedule(t, C=32, alt_frac=0.5)
+    rel = build_rel_of_pair(8, 4)
+    rng = np.random.default_rng(seed)
+    chunks = rng.integers(0, 33, size=(8, 8)).astype(np.int32)
+    np.fill_diagonal(chunks, 0)
+    eps = 1024.0
+    flows = rng.random((8, 8, sched.K)).astype(np.float32)
+    flows = flows / flows.sum(-1, keepdims=True) * chunks[..., None] * eps
+    out = np.asarray(quantize_chunks(
+        jnp.asarray(flows), jnp.asarray(chunks), sched.S, rel, eps
+    ))
+    # exact totals
+    np.testing.assert_array_equal(out.sum(-1), chunks)
+    # per-path caps respected
+    for s in range(8):
+        for d in range(8):
+            if s == d:
+                continue
+            caps = sched.S[rel[s, d]]
+            assert (out[s, d] <= caps).all()
+    assert (out >= 0).all()
+
+
+def test_planner_hysteresis_carry():
+    """Previous loads bias the next plan away from loaded resources."""
+    t = _tables()
+    tables = build_planner_tables(t)
+    cfg = PlannerConfig(chunk_bytes=float(MB), hysteresis=0.9)
+    D = np.zeros((8, 8), np.float32)
+    D[0, 1] = 64 * MB
+    flows0, loads0 = plan_flows(jnp.asarray(D), tables, cfg)
+    flows1, _ = plan_flows(jnp.asarray(D), tables, cfg, prev_loads=loads0 * 50)
+    # with heavy prior load on the same resources, the plan must shift more
+    # traffic onto alternates than the cold plan
+    f0 = np.asarray(flows0)[0, 1]
+    f1 = np.asarray(flows1)[0, 1]
+    assert f1[0] <= f0[0] + 1e-3

@@ -1,0 +1,179 @@
+"""Paper policy tests (§IV-B, §V-B): size threshold, hysteresis, penalties,
+ordering/determinism, balanced-traffic parity, saturation curve."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fabsim, mcf
+from repro.core.cost import CostModel, ResourceModel
+from repro.core.planner import PlannerConfig, plan_flows
+from repro.core.schedule import build_planner_tables
+from repro.core.topology import Topology
+
+MB = 1 << 20
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return Topology(8, group_size=4)
+
+
+# --------------------------------------------------------------------------- #
+# size threshold: <=1 MB never splits (paper Fig. 6c)
+# --------------------------------------------------------------------------- #
+
+
+def test_small_message_stays_single_path(topo):
+    demands = {(0, 1): 1.0 * MB, (2, 1): 1.0 * MB, (3, 1): 1.0 * MB}
+    plan = mcf.solve_mwu(topo, demands)
+    for key, flows in plan.consolidated().items():
+        assert len(flows) == 1, f"{key} split below threshold"
+        assert flows[0].path.n_relays == 0
+
+
+def test_large_message_splits_under_contention(topo):
+    # one elephant flow saturates its direct link -> relays recruited
+    plan = mcf.solve_mwu(topo, {(0, 1): 256.0 * MB})
+    assert plan.n_paths_used((0, 1)) >= 2, "elephant flow did not split"
+    # inter-node elephant: extra rails recruited via intra-node hops
+    plan = mcf.solve_mwu(topo, {(4, 0): 256.0 * MB})
+    assert plan.n_paths_used((4, 0)) >= 2, "rail flow did not split"
+
+
+def test_jnp_planner_respects_threshold(topo):
+    tables = build_planner_tables(topo)
+    d = np.zeros((8, 8), np.float32)
+    d[0, 1] = d[2, 1] = d[3, 1] = MB  # all at the no-split threshold
+    flows, _ = plan_flows(jnp.asarray(d), tables, PlannerConfig())
+    flows = np.asarray(flows)
+    # k=0 is the direct path in tables order; all flow must sit there
+    assert np.allclose(flows[..., 1:], 0.0)
+    np.testing.assert_allclose(flows[..., 0], d, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# size-aware relay penalty (F in Algorithm 1)
+# --------------------------------------------------------------------------- #
+
+
+def test_relay_path_cost_small_vs_large(topo):
+    from repro.core.paths import all_pairs_paths
+
+    rm = ResourceModel(topo)
+    paths = all_pairs_paths(topo)[(0, 1)]
+    relay = next(p for p in paths if p.n_relays > 0)
+    costs = np.zeros(rm.n_resources)
+    assert rm.path_cost(relay, costs, 0.5 * MB) == float("inf")
+    big = rm.path_cost(relay, costs, 64 * MB)
+    assert np.isfinite(big) and big > 0.0  # pays fill/flush penalty
+    direct = next(p for p in paths if p.n_relays == 0)
+    assert rm.path_cost(direct, costs, 64 * MB) == 0.0  # unloaded direct free
+
+
+# --------------------------------------------------------------------------- #
+# hysteresis: EMA on loads, no oscillation across invocations
+# --------------------------------------------------------------------------- #
+
+
+def test_hysteresis_ema():
+    rm = ResourceModel(Topology(8, group_size=4), CostModel(hysteresis=0.5))
+    prev = np.full(rm.n_resources, 10.0)
+    now = np.zeros(rm.n_resources)
+    sm = rm.smooth_loads(prev, now)
+    np.testing.assert_allclose(sm, 5.0)
+    rm0 = ResourceModel(Topology(8, group_size=4), CostModel(hysteresis=0.0))
+    np.testing.assert_allclose(rm0.smooth_loads(prev, now), now)
+
+
+def test_no_oscillation_across_replans(topo):
+    """Replanning the same demand with carried loads keeps the same routing.
+
+    (The simulated time of p2 is load-inflated by the EMA carryover by
+    design, so stability is asserted on the chosen path sets.)
+    """
+    demands = {(s, 0): 64.0 * MB for s in range(1, 4)}
+    demands[(0, 1)] = 256.0 * MB  # an elephant that does split
+    p1 = mcf.solve_mwu(topo, demands)
+    p2 = mcf.solve_mwu(topo, demands, prev_loads=p1.resource_bytes)
+    paths1 = {k: {f.path.nodes for f in v}
+              for k, v in p1.consolidated().items()}
+    paths2 = {k: {f.path.nodes for f in v}
+              for k, v in p2.consolidated().items()}
+    assert paths1 == paths2, "routing oscillated across replans"
+
+
+# --------------------------------------------------------------------------- #
+# determinism / ordering (per-destination reassembly)
+# --------------------------------------------------------------------------- #
+
+
+def test_plan_deterministic(topo):
+    demands = {(s, (s + 1) % 8): (8 + s) * MB for s in range(8)}
+    a = mcf.solve_mwu(topo, demands)
+    b = mcf.solve_mwu(topo, demands)
+    ka = {k: [(f.path.nodes, f.bytes) for f in v]
+          for k, v in a.consolidated().items()}
+    kb = {k: [(f.path.nodes, f.bytes) for f in v]
+          for k, v in b.consolidated().items()}
+    assert ka == kb
+
+
+def test_jnp_planner_deterministic(topo):
+    tables = build_planner_tables(topo)
+    rng = np.random.default_rng(0)
+    d = (rng.random((8, 8)) * 64 * MB).astype(np.float32)
+    np.fill_diagonal(d, 0)
+    f1, l1 = plan_flows(jnp.asarray(d), tables, PlannerConfig())
+    f2, l2 = plan_flows(jnp.asarray(d), tables, PlannerConfig())
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    # conservation: flows sum to demand per pair
+    np.testing.assert_allclose(np.asarray(f1).sum(-1), d, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# §V-E: live load awareness (background-tenant interference)
+# --------------------------------------------------------------------------- #
+
+
+def test_planner_routes_around_background_load(topo):
+    """A rail pre-loaded by another tenant is avoided when alternatives
+    exist (the paper's multi-tenant argument, §V-E)."""
+    # background elephant pinned on rank 4 -> 0's rail
+    bg = mcf.solve_direct(topo, {(4, 0): 1024.0 * MB})
+    # our job crosses the same rail
+    ours = {(4, 0): 64.0 * MB}
+    blind = mcf.solve_mwu(topo, ours)
+    aware = mcf.solve_mwu(topo, ours, prev_loads=2.0 * bg.resource_bytes)
+    rail = topo.link_id(4, 0)
+    assert aware.link_bytes[rail] < blind.link_bytes[rail], \
+        "planner ignored live background load"
+
+
+# --------------------------------------------------------------------------- #
+# balanced traffic: parity with direct routing (paper abstract)
+# --------------------------------------------------------------------------- #
+
+
+def test_balanced_traffic_parity(topo):
+    demands = {(s, d): 16.0 * MB for s in range(8) for d in range(8) if s != d}
+    t_direct = fabsim.simulate(mcf.solve_direct(topo, demands)).completion_time
+    t_nimble = fabsim.simulate(mcf.solve_mwu(topo, demands)).completion_time
+    assert t_nimble <= t_direct * 1.05, "NIMBLE regressed balanced traffic"
+
+
+# --------------------------------------------------------------------------- #
+# saturation curve: bandwidth grows with message size toward multi-path peak
+# --------------------------------------------------------------------------- #
+
+
+def test_single_pair_bandwidth_saturation(topo):
+    bws = []
+    for mb in [1, 4, 16, 64, 256, 1024]:
+        demands = {(0, 1): float(mb) * MB}
+        plan = mcf.solve_mwu(topo, demands)
+        bws.append(fabsim.pair_bandwidth(plan, (0, 1)) / 1e9)
+    assert all(b2 >= b1 - 1e-6 for b1, b2 in zip(bws, bws[1:])), bws
+    assert bws[0] == pytest.approx(120.0, rel=0.01)      # direct only
+    assert bws[-1] > 250.0                               # multi-path regime
+    assert bws[-1] < 278.2 * 1.01                        # injection cap

@@ -1,0 +1,105 @@
+"""Offset-parameterized schedule: structural invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core.dataplane import build_rel_of_pair, rel_id_of
+from repro.core.schedule import (
+    build_planner_tables,
+    build_schedule,
+    enumerate_relations,
+    n_candidates,
+    path_hops,
+    path_nodes,
+)
+from repro.core.topology import Topology
+
+
+@pytest.mark.parametrize("n,G", [(8, 4), (16, 4), (4, 4), (12, 4), (8, 2)])
+def test_relations_cover_all_pairs(n, G):
+    t = Topology(n, group_size=G)
+    rel = build_rel_of_pair(n, G)
+    rels = enumerate_relations(n // G, G)
+    assert len(rels) == n - 1 or len(rels) == (n // G) * G - 1
+    # every ordered pair maps to exactly one relation; diagonal none
+    for s in range(n):
+        seen = set()
+        for d in range(n):
+            if s == d:
+                assert rel[s, d] == -1
+            else:
+                assert rel[s, d] >= 0
+                seen.add(rel[s, d])
+        assert len(seen) == n - 1
+
+
+@pytest.mark.parametrize("n,G", [(8, 4), (16, 4)])
+def test_paths_reach_destination(n, G):
+    """Composing each candidate's hops lands on the relation's dest."""
+    NG = n // G
+    for rel in enumerate_relations(NG, G):
+        for k in range(n_candidates(rel, G)):
+            for s in range(n):
+                nodes = path_nodes(rel, k, s, G, NG)
+                g, p = divmod(s, G)
+                want = ((g + rel.m) % NG) * G + (p + rel.dq) % G
+                assert nodes[-1] == want
+                assert len(nodes) <= 4  # <=3 hops (paper cap)
+
+
+def test_candidate_uniqueness():
+    """Different k => different relay/rail — no duplicate routes."""
+    G, NG = 4, 2
+    for rel in enumerate_relations(NG, G):
+        seen = set()
+        for k in range(n_candidates(rel, G)):
+            nodes = tuple(path_nodes(rel, k, 0, G, NG))
+            assert nodes not in seen
+            seen.add(nodes)
+
+
+def test_schedule_slots_and_rounds():
+    t = Topology(8, group_size=4)
+    sched = build_schedule(t, C=16, alt_frac=0.5)
+    # slot bookkeeping covers every (rel, k) exactly S[rel, k] times
+    for rel in sched.rels:
+        for k in range(sched.K):
+            count = int(
+                ((sched.slot_rel == rel.rel_id) & (sched.slot_k == k)).sum()
+            )
+            assert count == int(sched.S[rel.rel_id, k])
+    # each slot appears in exactly the rounds its path has hops for
+    for sid in range(sched.n_slots):
+        rel = sched.rels[sched.slot_rel[sid]]
+        hops = path_hops(rel, int(sched.slot_k[sid]), t.group_size)
+        for tstep in range(3):
+            in_round = any(
+                sid in ids for _, ids in sched.rounds[tstep]
+            )
+            assert in_round == (hops[tstep] is not None)
+
+
+def test_perm_pairs_are_permutations():
+    t = Topology(16, group_size=4)
+    sched = build_schedule(t, C=4)
+    for rnd in sched.rounds:
+        for hop, _ in rnd:
+            pairs = sched.perm_pairs(hop)
+            srcs = [a for a, _ in pairs]
+            dsts = [b for _, b in pairs]
+            assert sorted(srcs) == list(range(16))
+            assert sorted(dsts) == list(range(16))
+
+
+def test_planner_tables_shapes():
+    t = Topology(8, group_size=4)
+    tb = build_planner_tables(t)
+    assert tb.pair_path_ids.shape == (64, tb.K)
+    # diagonal pairs have no paths
+    for s in range(8):
+        assert (tb.pair_path_ids[s * 8 + s] == -1).all()
+    # every non-diagonal pair has at least one candidate
+    for s in range(8):
+        for d in range(8):
+            if s != d:
+                assert (tb.pair_path_ids[s * 8 + d] >= 0).any()

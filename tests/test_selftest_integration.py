@@ -1,0 +1,27 @@
+"""Run the 8-forced-device selftest as a subprocess (needs its own
+XLA_FLAGS, which must be set before jax initializes — hence not in-process).
+
+Covers: bit-exact NIMBLE dataplane (all 3 modes) vs numpy oracle, MoE
+dispatch/combine vs dense reference under skew, and an expert-parallel
+train step on a (2, 4) mesh matching the single-device loss.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_multi_device_selftest():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.selftest"],
+        env=env, capture_output=True, text=True, timeout=580,
+    )
+    assert r.returncode == 0, f"selftest failed:\n{r.stdout}\n{r.stderr}"
+    assert "ALL OK" in r.stdout
