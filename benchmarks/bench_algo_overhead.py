@@ -2,12 +2,24 @@
 
 Paper: 1D stencil (each rank exchanges with neighbours); Algo column is
 NIMBLE's planning time (0.032-0.048 ms on their CPUs), Comm is the actual
-transfer.  We time BOTH planner implementations — the faithful host
-(numpy) Algorithm 1 and the jitted vectorized MWU — against the modeled
-communication time for the same message sizes.
+transfer.  We time BOTH planner implementations — the vectorized host
+sweep (Algorithm 1 over the cached incidence tables) and the jitted MWU —
+against the modeled communication time for the same message sizes.
+
+Additional sections quantify the incidence-core refactor:
+
+  * ``table1/host_speedup/n32`` — vectorized sweep vs the legacy
+    sequential-refresh solver on a skewed all-pairs demand at n=32
+    (acceptance target: >=5x);
+  * ``table1/jit_trace`` / ``table1/jit_plan`` — cold trace+compile time
+    and steady-state latency of the jitted planner;
+  * ``table1/jit_batch`` — per-matrix latency when B tenants are planned
+    in one ``plan_flows_batch`` call vs B sequential jit dispatches.
 """
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +28,7 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.fabsim import simulate
 from repro.core.mcf import solve_mwu
-from repro.core.planner import PlannerConfig, plan_flows
+from repro.core.planner import PlannerConfig, plan_flows, plan_flows_batch
 from repro.core.schedule import build_planner_tables
 from repro.core.topology import Topology
 
@@ -33,32 +45,133 @@ def stencil_demands(n: int, size: float):
     return D
 
 
-def run() -> None:
+def skewed_all_pairs(n: int, hot_mult: float = 8.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        (s, d): float(rng.integers(1, 64)) * MB * (hot_mult if d == 0 else 1.0)
+        for s in range(n)
+        for d in range(n)
+        if s != d
+    }
+
+
+def host_speedup(n: int = 32, reps: int = 5, slow_reps: int = 2) -> dict:
+    """Vectorized sweep vs legacy sequential-refresh solver at ``n`` devices."""
+    cm = CostModel()
+    t = Topology(n, group_size=4)
+    D = skewed_all_pairs(n)
+    us_sweep = time_fn(
+        lambda: solve_mwu(t, D, cm, eps=1 * MB), n=reps, warmup=1
+    )
+    us_seq = time_fn(
+        lambda: solve_mwu(t, D, cm, eps=1 * MB, refresh="sequential"),
+        n=slow_reps, warmup=0,
+    )
+    speedup = us_seq / us_sweep
+    emit(
+        f"table1/host_speedup/n{n}", us_sweep,
+        f"sweep={us_sweep / 1e3:.2f}ms legacy={us_seq / 1e3:.2f}ms "
+        f"speedup={speedup:.1f}x (target >=5x)",
+    )
+    return {
+        "n_devices": n,
+        "host_sweep_us": us_sweep,
+        "host_legacy_us": us_seq,
+        "host_speedup": speedup,
+    }
+
+
+def jit_metrics(n: int = 8, batch: int = 8, reps: int = 30) -> dict:
+    """Cold trace+compile time, steady latency, and batched-planning latency."""
+    t = Topology(n, group_size=4)
+    tables = build_planner_tables(t)
+    cfg = PlannerConfig(chunk_bytes=float(MB))
+    rng = np.random.default_rng(0)
+    Dm = (rng.integers(1, 64, size=(n, n)) * MB).astype(np.float32)
+    np.fill_diagonal(Dm, 0)
+
+    planner = jax.jit(lambda d: plan_flows(d, tables, cfg)[0])
+    t0 = time.perf_counter()
+    planner(jnp.asarray(Dm)).block_until_ready()
+    trace_ms = (time.perf_counter() - t0) * 1e3
+    us_jit = time_fn(
+        lambda: planner(jnp.asarray(Dm)).block_until_ready(), n=reps
+    )
+    emit(f"table1/jit_trace/n{n}", trace_ms * 1e3,
+         f"cold trace+compile={trace_ms:.1f}ms")
+    emit(f"table1/jit_plan/n{n}", us_jit, f"steady={us_jit / 1e3:.3f}ms")
+
+    Db = np.stack([Dm] * batch)
+    bplanner = jax.jit(lambda d: plan_flows_batch(d, tables, cfg)[0])
+    bplanner(jnp.asarray(Db)).block_until_ready()
+    us_batch = time_fn(
+        lambda: bplanner(jnp.asarray(Db)).block_until_ready(), n=reps
+    )
+    per_matrix = us_batch / batch
+    emit(
+        f"table1/jit_batch/B{batch}_n{n}", per_matrix,
+        f"batched={us_batch / 1e3:.3f}ms per_matrix={per_matrix / 1e3:.3f}ms "
+        f"vs sequential={us_jit / 1e3:.3f}ms "
+        f"({us_jit / max(per_matrix, 1e-9):.1f}x)",
+    )
+    return {
+        "jit_trace_ms": trace_ms,
+        "jit_plan_us": us_jit,
+        "jit_batch_per_matrix_us": per_matrix,
+        "batch": batch,
+    }
+
+
+def table1(sizes=(16, 32, 64, 128, 256), reps: int = 30) -> dict:
     cm = CostModel()
     t = Topology(8, group_size=4)
     tables = build_planner_tables(t)
     cfg = PlannerConfig(chunk_bytes=float(MB))
     planner = jax.jit(lambda d: plan_flows(d, tables, cfg)[0])
 
-    for size_mb in (16, 32, 64, 128, 256):
+    out = {}
+    for size_mb in sizes:
         dem = stencil_demands(8, size_mb * MB)
         Dm = np.zeros((8, 8), np.float32)
         for (s, d), v in dem.items():
             Dm[s, d] = v
 
         us_jit = time_fn(
-            lambda: planner(jnp.asarray(Dm)).block_until_ready(), n=30
+            lambda: planner(jnp.asarray(Dm)).block_until_ready(), n=reps
         )
         us_host = time_fn(lambda: solve_mwu(t, dem, cm, eps=1 * MB), n=5)
         plan = solve_mwu(t, dem, cm, eps=1 * MB)
         comm_ms = simulate(plan).completion_time * 1e3
         emit(
             f"table1/algo_jit/{size_mb}MB", us_jit,
-            f"algo={us_jit/1e3:.3f}ms comm={comm_ms:.3f}ms "
-            f"ratio={us_jit/1e3/comm_ms:.3f}",
+            f"algo={us_jit / 1e3:.3f}ms comm={comm_ms:.3f}ms "
+            f"ratio={us_jit / 1e3 / comm_ms:.3f}",
         )
         emit(f"table1/algo_host/{size_mb}MB", us_host,
-             f"host_algo={us_host/1e3:.3f}ms (paper: 0.032-0.048ms)")
+             f"host_algo={us_host / 1e3:.3f}ms (paper: 0.032-0.048ms)")
+        out[f"{size_mb}MB"] = {"jit_us": us_jit, "host_us": us_host,
+                               "comm_ms": comm_ms}
+    return out
+
+
+def run() -> dict:
+    metrics = {"table1": table1()}
+    metrics.update(jit_metrics())
+    metrics.update(host_speedup(n=32))
+    return metrics
+
+
+def smoke() -> dict:
+    """Few-second variant for CI: one size, few reps, same metric keys.
+
+    Keeps the n=32 host-speedup acceptance metric (the legacy solver runs
+    once, ~0.5 s) so planner-latency regressions show up in the bench
+    trajectory on every PR.
+    """
+    metrics = {"table1": table1(sizes=(16,), reps=5)}
+    metrics.update(jit_metrics(n=8, batch=4, reps=5))
+    metrics.update(host_speedup(n=32, reps=3, slow_reps=1))
+    return metrics
 
 
 if __name__ == "__main__":

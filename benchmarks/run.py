@@ -10,11 +10,33 @@ writes the aggregate to benchmarks/results.csv.
   Table I     bench_algo_overhead   planner overhead vs comm time
   §V-E        bench_multitenant     background-tenant interference
   (extra)     bench_kernels         kernel micro-benches
+
+``--smoke`` runs only the planner-overhead section in a few seconds and
+writes ``BENCH_algo_overhead.json`` at the repo root, so planner-latency
+regressions show up in the bench trajectory on every PR.
 """
 
 from __future__ import annotations
 
+import json
 import os
+import sys
+
+
+def smoke() -> None:
+    from . import bench_algo_overhead, common
+
+    print("name,us_per_call,derived")
+    print("# --- table1_overhead (smoke) ---")
+    metrics = bench_algo_overhead.smoke()
+    out = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_algo_overhead.json",
+    )
+    with open(out, "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(common.ROWS)} rows; metrics -> {out}")
 
 
 def main() -> None:
@@ -53,4 +75,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

@@ -22,11 +22,11 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import fabsim, mcf
 from repro.core.dataplane import NimbleAllToAll, ref_all_to_allv
+from repro.core.jax_compat import shard_map
 from repro.core.topology import Topology
 
 

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.core.jax_compat import set_mesh
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.registry import build_model
 from repro.optim import adamw
@@ -83,7 +84,7 @@ def main(argv=None):
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
                                   global_batch=args.batch, seed=args.seed))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.device_put(params, build_param_shardings(params, ctx))
         jf = jax.jit(step_fn, donate_argnums=(0, 1))
         losses, t0 = [], time.time()

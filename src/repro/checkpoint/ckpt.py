@@ -19,7 +19,8 @@ from typing import Any, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import orjson
+
+from repro.jsonio import json_dumps as _json_dumps, json_loads as _json_loads
 
 
 def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
@@ -80,7 +81,7 @@ def save(path: str, step: int, tree, shard: int = 0) -> str:
         },
     }
     with open(os.path.join(d, "index.json"), "wb") as f:
-        f.write(orjson.dumps(index))
+        f.write(_json_dumps(index))
     return d
 
 
@@ -100,7 +101,7 @@ def restore(path: str, step: int | None = None,
             raise FileNotFoundError(f"no checkpoints under {path}")
     d = os.path.join(path, f"step_{step:08d}")
     with open(os.path.join(d, "index.json"), "rb") as f:
-        index = orjson.loads(f.read())
+        index = _json_loads(f.read())
     shards = {}
     for m in index["meta"].values():
         s = m["shard"]

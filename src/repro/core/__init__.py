@@ -5,7 +5,8 @@ Public API:
   CostModel / ResourceModel  — capacity-normalized cost F(L) (cost.py)
   solve_mwu / solve_direct / solve_static_striping — Algorithm 1 + baselines
   simulate / simulate_nccl_rounds — fabric simulator (fabsim.py)
-  PlannerConfig / plan_flows — jittable runtime planner (planner.py)
+  PathIncidence / incidence_for — cached sparse planner core (incidence.py)
+  PlannerConfig / plan_flows / plan_flows_batch — jittable runtime planner
   NimbleAllToAll             — scheduled shard_map dataplane (dataplane.py)
   MoEDispatcher              — expert-parallel dispatch/combine (moe_comm.py)
 """
@@ -13,6 +14,7 @@ Public API:
 from .cost import CostModel, ResourceModel
 from .dataplane import NimbleAllToAll, baseline_all_to_all, ref_all_to_allv
 from .fabsim import SimResult, simulate, simulate_nccl_rounds
+from .incidence import PathIncidence, incidence_for, topology_fingerprint
 from .mcf import (
     Plan,
     congestion_lower_bound,
@@ -22,7 +24,14 @@ from .mcf import (
 )
 from .moe_comm import MoECommConfig, MoEDispatcher
 from .paths import Path, all_pairs_paths, enumerate_paths
-from .planner import PlannerConfig, plan_flows, quantize_chunks
+from .planner import (
+    PlannerConfig,
+    plan_chunks_batch_jit,
+    plan_chunks_jit,
+    plan_flows,
+    plan_flows_batch,
+    quantize_chunks,
+)
 from .schedule import build_planner_tables, build_schedule
 from .topology import LinkCaps, Topology
 
@@ -30,7 +39,9 @@ __all__ = [
     "Topology", "LinkCaps", "CostModel", "ResourceModel", "Plan",
     "solve_mwu", "solve_direct", "solve_static_striping",
     "congestion_lower_bound", "simulate", "simulate_nccl_rounds", "SimResult",
-    "PlannerConfig", "plan_flows", "quantize_chunks",
+    "PlannerConfig", "plan_flows", "plan_flows_batch", "quantize_chunks",
+    "plan_chunks_jit", "plan_chunks_batch_jit",
+    "PathIncidence", "incidence_for", "topology_fingerprint",
     "build_schedule", "build_planner_tables",
     "NimbleAllToAll", "baseline_all_to_all", "ref_all_to_allv",
     "MoECommConfig", "MoEDispatcher",

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cost import CostModel
-from .planner import PlannerConfig, plan_flows, quantize_chunks
+from .planner import PlannerConfig, plan_flows, plan_flows_batch, quantize_chunks
 from .schedule import (
     CommSchedule,
     PlannerTables,
@@ -164,6 +164,25 @@ class NimbleAllToAll:
             self.rel_of_pair,
             self.cfg.chunk_bytes,
         )
+
+    def plan_batch(self, demand_chunks: jnp.ndarray) -> jnp.ndarray:
+        """Plan a batch of demand matrices in one call: [B, n, n] -> [B, n, n, K].
+
+        Multi-tenant / per-layer entry point (host-driven, outside
+        shard_map): every batch entry is planned by the vmapped MWU against
+        the same cached incidence tables and quantized to slot capacities.
+        Only meaningful for ``mode="nimble"``; static modes broadcast their
+        elementwise rules over the batch via the same ``_plan`` math.
+        """
+        if self.mode != "nimble":
+            return jax.vmap(self._plan)(demand_chunks)
+        D = demand_chunks.astype(jnp.float32) * jnp.float32(self.cfg.chunk_bytes)
+        flows, _ = plan_flows_batch(D, self.tables, self.cfg)
+        return jax.vmap(
+            lambda f, dc: quantize_chunks(
+                f, dc, self.sched.S, self.rel_of_pair, self.cfg.chunk_bytes
+            )
+        )(flows, demand_chunks.astype(jnp.int32))
 
     # -- execution ----------------------------------------------------------------
     def plan_from_counts(self, send_chunks: jnp.ndarray) -> jnp.ndarray:

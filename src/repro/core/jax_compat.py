@@ -1,0 +1,47 @@
+"""Version tolerance for the handful of jax APIs that moved across releases.
+
+The repo targets current jax, but the container may pin an older release
+(e.g. 0.4.x).  Import these shims instead of reaching for the moved names:
+
+  * :func:`shard_map` — top-level ``jax.shard_map`` on new jax,
+    ``jax.experimental.shard_map.shard_map`` on old;
+  * :func:`set_mesh` — ``jax.set_mesh(mesh)`` context on new jax; on old
+    jax the ``Mesh`` object itself is the context manager;
+  * :func:`pvary` — ``jax.lax.pvary`` on new jax (varying-axis types under
+    shard_map); identity on old jax, which has no such type system.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax < 0.6: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename papered
+    over (the replication-check kwarg was renamed in new jax)."""
+    if not _HAS_CHECK_VMA and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh  # old jax: Mesh is itself a context manager
+
+
+def pvary(x, axis_name):
+    """Mark ``x`` as varying over ``axis_name`` (no-op on old jax)."""
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axis_name) if fn is not None else x

@@ -89,6 +89,24 @@ class MoEDispatcher:
             )
         return self._comms[key]
 
+    def plan_batched(
+        self, demand_chunks: jnp.ndarray, n_assign: int
+    ) -> jnp.ndarray:
+        """Plan B dispatch rounds in one jit call: [B, n, n] -> [B, n, n, K].
+
+        Multi-tenant / pipelined entry point: the demand matrices of
+        several MoE layers (or microbatches, or co-located tenants) are
+        planned together by the vmapped MWU over the shared cached
+        incidence tables, instead of B sequential planner dispatches.
+        ``n_assign`` is the per-round assignment count (T*k), as in
+        :meth:`dispatch`, and fixes the chunk capacity C.
+        """
+        cfg = self.cfg
+        cap_tok = self.capacity_tokens(n_assign)
+        C = cap_tok // cfg.chunk_tokens
+        comm = self._comm(C, cfg.chunk_tokens * cfg.d_model)
+        return comm.plan_batch(demand_chunks)
+
     # -- dispatch ----------------------------------------------------------------
     def dispatch(
         self,

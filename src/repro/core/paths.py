@@ -84,13 +84,25 @@ def enumerate_paths(topo: Topology, s: int, d: int) -> List[Path]:
     return out
 
 
+_PATHS_CACHE: Dict[tuple, Dict[Tuple[int, int], List[Path]]] = {}
+
+
 def all_pairs_paths(topo: Topology) -> Dict[Tuple[int, int], List[Path]]:
-    """Candidate path table for every ordered device pair."""
+    """Candidate path table for every ordered device pair.
+
+    Memoized under the topology fingerprint (two topologies with equal
+    fingerprints have identical link ids) — callers must treat the returned
+    table as read-only.
+    """
+    hit = _PATHS_CACHE.get(topo.fingerprint)
+    if hit is not None:
+        return hit
     table: Dict[Tuple[int, int], List[Path]] = {}
     for s in range(topo.n_devices):
         for d in range(topo.n_devices):
             if s != d:
                 table[(s, d)] = enumerate_paths(topo, s, d)
+    _PATHS_CACHE[topo.fingerprint] = table
     return table
 
 

@@ -19,6 +19,15 @@ recorded per DESIGN.md §2:
 The planner itself is a few thousand FLOPs on a [n², K] problem — Table I of
 the paper measures the GPU version at ~0.03–0.05 ms; ours is benchmarked in
 ``benchmarks/bench_algo_overhead.py``.
+
+Data layout: all path pricing/charging runs against the per-pair candidate
+rows of the shared :class:`~repro.core.incidence.PathIncidence` (cached per
+topology fingerprint, DESIGN.md §2).  The gather/scatter indexing is
+precomputed once per table build, so the ``fori_loop`` body is pure dense
+ops: one gather of live costs, a masked max, an argmin, a one-hot flow
+update, and a segment-sum load accumulation.  ``plan_flows_batch`` /
+``plan_chunks_batch_jit`` vmap the same loop over a batch of demand
+matrices for multi-tenant planning.
 """
 
 from __future__ import annotations
@@ -32,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cost import CostModel
+from .jax_compat import pvary
 from .schedule import PlannerTables
 
 _BIG = 1e30
@@ -56,13 +66,13 @@ def plan_flows(
     """Returns (flows [n, n, K] bytes, resource loads [n_resources])."""
     n, K = tables.n, tables.K
     caps = jnp.asarray(tables.caps, dtype=jnp.float32)
-    path_rids = jnp.asarray(tables.path_rids)          # [P, MC]
-    path_mult = jnp.asarray(tables.path_mult)          # [P, MC]
-    path_penalty = jnp.asarray(tables.path_penalty)    # [P]
-    path_relay = jnp.asarray(tables.path_relay)        # [P]
-    pair_paths = jnp.asarray(tables.pair_path_ids)     # [n*n, K]
-    valid = pair_paths >= 0
-    pair_paths_c = jnp.where(valid, pair_paths, 0)
+    # All gather/scatter indexing is precomputed per pair on the incidence
+    # tables (DESIGN.md §2.3) — the loop body below is pure dense ops.
+    pcand = tables.pair_candidates
+    cand_rids = jnp.asarray(pcand.rids)                # [n*n, K, MC]
+    cand_mult = jnp.asarray(pcand.mult)                # [n*n, K, MC]
+    cand_mask = jnp.asarray(pcand.mask, dtype=jnp.float32)
+    cand_pen = jnp.asarray(pcand.penalty)              # [n*n, K]
 
     D = demand_bytes.astype(jnp.float32).reshape(-1)   # [n*n]
     msg = D                                            # per-pair message size
@@ -73,33 +83,35 @@ def plan_flows(
     if prev_loads is not None:
         loads0 = jnp.float32(cfg.hysteresis) * prev_loads
 
-    # per-path size gate: relay paths priced out for small messages
-    relay_gate = (
-        path_relay[pair_paths_c] & (msg[:, None] <= cfg.split_threshold)
+    # static price-out mask: K-padding always, relay paths for small messages
+    dead = jnp.asarray(~pcand.valid) | (
+        jnp.asarray(pcand.relay) & (msg[:, None] <= cfg.split_threshold)
     )  # [n*n, K]
 
     def body(_, state):
         flows, res, loads = state
         costs = loads / caps                                        # [R]
-        pc = jnp.max(
-            costs[path_rids] * (path_mult > 0), axis=-1
-        ) + path_penalty                                            # [P]
-        pcK = jnp.where(valid, pc[pair_paths_c], _BIG)              # [n*n, K]
-        pcK = jnp.where(relay_gate, _BIG, pcK)
+        pcK = (
+            jnp.max(costs[cand_rids] * cand_mask, axis=-1) + cand_pen
+        )                                                           # [n*n, K]
+        pcK = jnp.where(dead, _BIG, pcK)
         best_k = jnp.argmin(pcK, axis=-1)                           # [n*n]
-        best_pid = jnp.take_along_axis(
-            pair_paths_c, best_k[:, None], axis=-1
-        )[:, 0]
         # Algorithm 1 lines 24-28: quantized λ-fraction of the residual
         f = jnp.where(
             res < eps, res, jnp.floor(res * lam / eps) * eps
         )
         f = jnp.where((res >= eps) & (f <= 0), jnp.minimum(eps, res), f)
         f = jnp.maximum(f, 0.0)
-        flows = flows.at[jnp.arange(n * n), best_k].add(f)
-        charges = (f[:, None] * path_mult[best_pid]).reshape(-1)
-        rids = path_rids[best_pid].reshape(-1)
-        loads = loads + jnp.zeros_like(loads).at[rids].add(charges)
+        onehot = jax.nn.one_hot(best_k, K, dtype=flows.dtype)       # [n*n, K]
+        flows = flows + f[:, None] * onehot
+        sel = best_k[:, None, None]
+        rids = jnp.take_along_axis(cand_rids, sel, axis=1)[:, 0]    # [n*n, MC]
+        mult = jnp.take_along_axis(cand_mult, sel, axis=1)[:, 0]    # [n*n, MC]
+        loads = loads + jax.ops.segment_sum(
+            (f[:, None] * mult).reshape(-1),
+            rids.reshape(-1),
+            num_segments=tables.n_resources,
+        )
         res = res - f
         return flows, res, loads
 
@@ -107,14 +119,35 @@ def plan_flows(
     if vary_axis is not None:
         # inside shard_map the demand is axis-varying; the loop carries must
         # match or lax.fori_loop rejects the body signature.
-        flows = jax.lax.pvary(flows, vary_axis)
-        loads0 = jax.lax.pvary(loads0, vary_axis)
+        flows = pvary(flows, vary_axis)
+        loads0 = pvary(loads0, vary_axis)
     flows, res, loads = jax.lax.fori_loop(
         0, cfg.n_iters, body, (flows, D, loads0)
     )
     # residual after T iterations -> least-hop path (k=0)
     flows = flows.at[:, 0].add(res)
     return flows.reshape(n, n, K), loads
+
+
+def plan_flows_batch(
+    demand_bytes: jnp.ndarray,        # [B, n, n]
+    tables: PlannerTables,
+    cfg: PlannerConfig = PlannerConfig(),
+    prev_loads: jnp.ndarray | None = None,  # [B, n_resources] or None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Plan a batch of demand matrices in one call via ``jax.vmap``.
+
+    Multi-tenant / per-expert entry point: B independent demand matrices
+    (tenants, MoE layers, microbatches) are planned against the same cached
+    incidence tables in a single jit-compiled vectorized MWU, instead of B
+    sequential ``plan_flows`` dispatches.  Returns ``(flows [B, n, n, K],
+    loads [B, n_resources])``.
+    """
+    if prev_loads is None:
+        return jax.vmap(lambda d: plan_flows(d, tables, cfg))(demand_bytes)
+    return jax.vmap(
+        lambda d, p: plan_flows(d, tables, cfg, prev_loads=p)
+    )(demand_bytes, prev_loads)
 
 
 def quantize_chunks(
@@ -159,6 +192,28 @@ def plan_chunks_jit(
         flows, demand_chunks, tables.slot_caps, tables.rel_of_pair,
         cfg.chunk_bytes,
     )
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def plan_chunks_batch_jit(
+    demand_chunks: jnp.ndarray,   # [B, n, n] int32
+    tables: "PlannerTablesHashable",
+    cfg: PlannerConfig,
+) -> jnp.ndarray:
+    """Batched multi-tenant planning: [B, n, n] -> [B, n, n, K] chunks.
+
+    One jit call plans every tenant/layer demand matrix against the shared
+    incidence tables (vectorized MWU under ``vmap``) and quantizes each to
+    slot capacities.
+    """
+    t = tables.tables
+    D = demand_chunks.astype(jnp.float32) * cfg.chunk_bytes
+    flows, _ = plan_flows_batch(D, t, cfg)
+    return jax.vmap(
+        lambda f, dc: quantize_chunks(
+            f, dc, tables.slot_caps, tables.rel_of_pair, cfg.chunk_bytes
+        )
+    )(flows, demand_chunks.astype(jnp.int32))
 
 
 class PlannerTablesHashable:

@@ -34,7 +34,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .cost import CostModel
-from .topology import INTRA, Topology
+from .incidence import MAX_CHARGE, PathIncidence, incidence_for, topology_fingerprint
+from .topology import Topology
 
 # hop kinds
 ROT = 0
@@ -97,93 +98,16 @@ def path_nodes(rel: Relation, k: int, src: int, G: int, n_groups: int) -> List[i
     return nodes
 
 
-@dataclasses.dataclass
-class PlannerTables:
-    """Dense tables for the jittable MWU planner (planner.py).
-
-    Resources follow cost.ResourceModel: [links (E), relay (n), inject (n)]
-    plus one trailing dummy slot used for padding.
-    """
-
-    n: int
-    K: int                      # max candidates per pair
-    n_resources: int            # incl. dummy
-    caps: np.ndarray            # [n_resources] float
-    # per concrete path (P = n * n_rel * K, invalid padded):
-    path_rids: np.ndarray       # [P, MAX_CHARGE] int32 (dummy-padded)
-    path_mult: np.ndarray       # [P, MAX_CHARGE] float32 (0-padded)
-    path_penalty: np.ndarray    # [P] float32 (fill/flush, seconds)
-    path_relay: np.ndarray      # [P] bool (has relays -> size threshold)
-    pair_path_ids: np.ndarray   # [n*n, K] int32, -1 for invalid/self
-
-
-MAX_CHARGE = 8  # 3 links + src inject + 2 relays + 2 relay injects
+# The dense planner tables are now a view of the shared planner core
+# (incidence.py): one sparse path→resource incidence per (Topology,
+# CostModel), cached under the topology fingerprint.  ``PlannerTables`` is
+# kept as the historical name — it IS the incidence structure.
+PlannerTables = PathIncidence
 
 
 def build_planner_tables(topo: Topology, cm: CostModel | None = None) -> PlannerTables:
-    cm = cm or CostModel()
-    n, G, NG = topo.n_devices, topo.group_size, topo.n_groups
-    rels = enumerate_relations(NG, G)
-    K = max(n_candidates(r, G) for r in rels)
-    E = topo.n_links
-    n_res = E + 2 * n + 1
-    dummy = n_res - 1
-    caps = np.empty(n_res)
-    caps[:E] = topo.capacity
-    caps[E : E + n] = cm.relay_cap
-    caps[E + n : E + 2 * n] = cm.inject_cap
-    caps[dummy] = 1e30
-
-    P = n * len(rels) * K
-    rids = np.full((P, MAX_CHARGE), dummy, dtype=np.int32)
-    mult = np.zeros((P, MAX_CHARGE), dtype=np.float32)
-    pen = np.zeros(P, dtype=np.float32)
-    relay = np.zeros(P, dtype=bool)
-    pair_paths = np.full((n * n, K), -1, dtype=np.int32)
-
-    pid = 0
-    for s in range(n):
-        for rel in rels:
-            for k in range(K):
-                if k < n_candidates(rel, G):
-                    nodes = path_nodes(rel, k, s, G, NG)
-                    d = nodes[-1]
-                    links = [topo.link_id(a, b) for a, b in zip(nodes, nodes[1:])]
-                    relayed = len(nodes) > 2
-                    c = 0
-                    min_cap = np.inf
-                    for l in links:
-                        m = (
-                            1.0 / cm.rail_relay_eff
-                            if relayed and topo.kind[l] != INTRA
-                            else 1.0
-                        )
-                        rids[pid, c], mult[pid, c] = l, m
-                        min_cap = min(min_cap, topo.capacity[l])
-                        c += 1
-                    rids[pid, c], mult[pid, c] = E + n + s, 1.0  # src inject
-                    c += 1
-                    for mid in nodes[1:-1]:
-                        rids[pid, c], mult[pid, c] = E + mid, 1.0       # relay
-                        rids[pid, c + 1], mult[pid, c + 1] = E + n + mid, 1.0
-                        c += 2
-                        min_cap = min(min_cap, cm.relay_cap)
-                    if relayed:
-                        pen[pid] = cm.hop_setup_bytes * (len(nodes) - 2) / min_cap
-                        relay[pid] = True
-                    pair_paths[s * n + d, k] = pid
-                pid += 1
-    return PlannerTables(
-        n=n,
-        K=K,
-        n_resources=n_res,
-        caps=caps,
-        path_rids=rids,
-        path_mult=mult,
-        path_penalty=pen,
-        path_relay=relay,
-        pair_path_ids=pair_paths,
-    )
+    """Cached planner tables for ``topo`` (see ``incidence.incidence_for``)."""
+    return incidence_for(topo, cm)
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +155,28 @@ class CommSchedule:
         return pairs
 
 
+_SCHED_CACHE: Dict[tuple, CommSchedule] = {}
+
+
 def build_schedule(
+    topo: Topology, C: int, alt_frac: float = 0.5
+) -> CommSchedule:
+    """Build (or fetch the cached) slot layout for ``(topo, C, alt_frac)``.
+
+    Cached under the topology fingerprint: every MoE layer / tenant with the
+    same geometry shares one schedule, so repeated dataplane construction
+    stops re-enumerating slots and rounds.  Treat the result as immutable.
+    """
+    key = (topology_fingerprint(topo), int(C), float(alt_frac))
+    hit = _SCHED_CACHE.get(key)
+    if hit is not None:
+        return hit
+    sched = _build_schedule(topo, C, alt_frac)
+    _SCHED_CACHE[key] = sched
+    return sched
+
+
+def _build_schedule(
     topo: Topology, C: int, alt_frac: float = 0.5
 ) -> CommSchedule:
     G, NG = topo.group_size, topo.n_groups

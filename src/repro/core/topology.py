@@ -115,6 +115,24 @@ class Topology:
                 for r in range(G):
                     self._add(ga * G + r, gb * G + r, kind)
 
+    # -- identity -------------------------------------------------------------
+    @property
+    def fingerprint(self) -> Tuple:
+        """Hashable key that fully determines the link graph.
+
+        ``_build`` is deterministic in these parameters, so two topologies
+        with equal fingerprints have identical link ids, kinds, and
+        capacities — the caching key for planner tables (DESIGN.md §2).
+        """
+        return (
+            self.n_devices,
+            self.group_size,
+            self.n_pods,
+            float(self.caps.intra),
+            float(self.caps.rail),
+            float(self.caps.dci),
+        )
+
     # -- lookups --------------------------------------------------------------
     def pod_of_group(self, g: int) -> int:
         return g // self.groups_per_pod

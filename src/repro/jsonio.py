@@ -1,0 +1,26 @@
+"""JSON bytes IO with an orjson fast path and a stdlib fallback.
+
+The container may not ship ``orjson``; both writers (checkpoint index,
+dry-run records) use these helpers so the fallback lives in one place and
+the on-disk format stays identical either way.
+"""
+
+from __future__ import annotations
+
+try:
+    import orjson
+
+    def json_dumps(obj, *, indent: bool = False) -> bytes:
+        return orjson.dumps(obj, option=orjson.OPT_INDENT_2 if indent else 0)
+
+    def json_loads(data: bytes):
+        return orjson.loads(data)
+
+except ImportError:  # stdlib fallback — same on-disk format, just slower
+    import json
+
+    def json_dumps(obj, *, indent: bool = False) -> bytes:
+        return json.dumps(obj, indent=2 if indent else None).encode()
+
+    def json_loads(data: bytes):
+        return json.loads(data)

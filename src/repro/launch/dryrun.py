@@ -27,7 +27,9 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 import numpy as np
-import orjson
+
+from repro.core.jax_compat import set_mesh
+from repro.jsonio import json_dumps
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
@@ -105,7 +107,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
 
     ispecs = model.input_specs(shape)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind in ("train",):
             opt_cfg = adamw.AdamWConfig()
             opt_abs = jax.eval_shape(adamw.init, params_abs)
@@ -248,7 +250,7 @@ def main():
                    "trace": traceback.format_exc()[-2000:]}
             failures += 1
         with open(path, "wb") as f:
-            f.write(orjson.dumps(rec, option=orjson.OPT_INDENT_2))
+            f.write(json_dumps(rec, indent=True))
         status = rec.get("status")
         roof = rec.get("roofline", {})
         print(

@@ -19,10 +19,10 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.dataplane import NimbleAllToAll, ref_all_to_allv
+from repro.core.jax_compat import set_mesh, shard_map
 from repro.core.moe_comm import MoECommConfig, MoEDispatcher
 
 
@@ -116,7 +116,7 @@ def test_ep_train_step() -> bool:
         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32), dtype=np.int64).astype(np.int32)),
     }
     step = make_train_step(model, adamw.AdamWConfig())
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         p_sh = build_param_shardings(params, ctx)
         params_s = jax.device_put(params, p_sh)
         _, _, metrics = jax.jit(step)(params_s, opt, batch)

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to fixed-sample sweeps
+    from hypothesis_compat import given, settings, st
 
 from repro.core.cost import CostModel
 from repro.core.mcf import (

@@ -1,0 +1,110 @@
+"""Host/jit/legacy parity contract (DESIGN.md §2.4).
+
+On random skewed demand matrices the three Algorithm-1 implementations —
+the vectorized host sweep (``solve_mwu``), the legacy sequential-refresh
+solver (``solve_mwu(..., refresh="sequential")``), and the jitted
+``plan_flows`` — must agree on total routed bytes, land within a small
+tolerance of each other on max normalized load, and never beat the cut
+lower bound.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import incidence
+from repro.core.mcf import congestion_lower_bound, solve_mwu
+from repro.core.planner import PlannerConfig, plan_flows, plan_flows_batch
+from repro.core.schedule import build_planner_tables
+from repro.core.topology import Topology
+
+MB = 1 << 20
+
+# max-load agreement tolerance between implementations: the refresh
+# disciplines differ (per-assignment vs per-sub-batch vs fully parallel
+# with fixed T), so plans are equivalent, not identical
+Z_RTOL = 0.25
+
+
+def _skewed_demand(rng, n, hot_frac):
+    """Random skewed demand: ``hot_frac`` of each row onto one hot column."""
+    D = rng.integers(1, 64, size=(n, n)).astype(np.float64) * MB
+    hot = int(rng.integers(0, n))
+    D[:, hot] += hot_frac * D.sum(axis=1)
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+@pytest.mark.parametrize("seed,hot_frac", [(0, 0.0), (1, 0.3), (2, 0.7)])
+def test_host_jit_legacy_equivalence(seed, hot_frac):
+    n = 8
+    t = Topology(n, group_size=4)
+    rng = np.random.default_rng(seed)
+    D = _skewed_demand(rng, n, hot_frac)
+    demands = {(s, d): float(D[s, d]) for s in range(n) for d in range(n)
+               if D[s, d] > 0}
+
+    sweep = solve_mwu(t, demands, eps=1 * MB)
+    legacy = solve_mwu(t, demands, eps=1 * MB, refresh="sequential")
+
+    tables = build_planner_tables(t)
+    cfg = PlannerConfig(chunk_bytes=float(MB), n_iters=32)
+    flows, loads = jax.jit(lambda d: plan_flows(d, tables, cfg))(
+        jnp.asarray(D, dtype=jnp.float32)
+    )
+    flows = np.asarray(flows)
+
+    # 1) all three route every byte
+    total = D.sum()
+    for plan in (sweep, legacy):
+        routed = sum(plan.per_pair_bytes().values())
+        assert routed == pytest.approx(total, rel=1e-6)
+    np.testing.assert_allclose(flows.sum(-1), D, rtol=1e-5)
+
+    # 2) max normalized load within tolerance across implementations
+    z_sweep = sweep.max_normalized_load()
+    z_legacy = legacy.max_normalized_load()
+    z_jit = float(np.max(np.asarray(loads) / tables.caps))
+    z = np.array([z_sweep, z_legacy, z_jit])
+    assert z.max() <= z.min() * (1.0 + Z_RTOL), (
+        f"implementations diverged: sweep={z_sweep} legacy={z_legacy} "
+        f"jit={z_jit}"
+    )
+
+    # 3) none beats the cut lower bound
+    lb = congestion_lower_bound(t, demands)
+    assert z.min() >= lb * 0.999
+
+
+def test_batched_planner_matches_single():
+    """plan_flows_batch == B independent plan_flows calls, bit-for-bit."""
+    n = 8
+    t = Topology(n, group_size=4)
+    tables = build_planner_tables(t)
+    cfg = PlannerConfig(chunk_bytes=float(MB), n_iters=16)
+    rng = np.random.default_rng(7)
+    Ds = np.stack(
+        [_skewed_demand(rng, n, f) for f in (0.0, 0.4, 0.8)]
+    ).astype(np.float32)
+
+    bf, bl = jax.jit(lambda d: plan_flows_batch(d, tables, cfg))(
+        jnp.asarray(Ds)
+    )
+    for b in range(Ds.shape[0]):
+        f1, l1 = jax.jit(lambda d: plan_flows(d, tables, cfg))(
+            jnp.asarray(Ds[b])
+        )
+        np.testing.assert_array_equal(np.asarray(bf[b]), np.asarray(f1))
+        np.testing.assert_array_equal(np.asarray(bl[b]), np.asarray(l1))
+
+
+def test_tables_cached_by_topology_fingerprint():
+    incidence.cache_clear()
+    a = build_planner_tables(Topology(8, group_size=4))
+    b = build_planner_tables(Topology(8, group_size=4))
+    c = build_planner_tables(Topology(16, group_size=4))
+    assert a is b
+    assert c is not a
+    info = incidence.cache_info()
+    assert info["size"] == 2 and info["hits"] == 1

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests fall back to fixed-sample sweeps
+    from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import ckpt
 from repro.configs import ARCH_IDS, get_config
