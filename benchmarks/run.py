@@ -9,34 +9,51 @@ writes the aggregate to benchmarks/results.csv.
   Fig 8       bench_moe_e2e         MoE end-to-end breakdown
   Table I     bench_algo_overhead   planner overhead vs comm time
   §V-E        bench_multitenant     background-tenant interference
+  §III/V      bench_runtime_adapt   execution-time adaptation vs static/oracle
   (extra)     bench_kernels         kernel micro-benches
 
-``--smoke`` runs only the planner-overhead section in a few seconds and
-writes ``BENCH_algo_overhead.json`` at the repo root, so planner-latency
-regressions show up in the bench trajectory on every PR.
+``--smoke`` runs the planner-overhead and runtime-adaptation sections in a
+few seconds and writes ``BENCH_algo_overhead.json`` /
+``BENCH_runtime_adapt.json`` at the repo root, so planner-latency and
+adaptation regressions show up in the bench trajectory on every PR.
 """
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(ROOT, "src")
+if _SRC not in sys.path:   # benches usually run with PYTHONPATH=src already
+    sys.path.insert(0, _SRC)
+
+
+def _write_metrics(fname: str, metrics: dict, kind: str | None = None) -> str:
+    from repro.jsonio import tag, write_json_file
+
+    if kind is not None:
+        metrics = tag(kind, metrics)
+    out = os.path.join(ROOT, fname)
+    write_json_file(out, metrics)
+    return out
+
 
 def smoke() -> None:
-    from . import bench_algo_overhead, common
+    from . import bench_algo_overhead, bench_runtime_adapt, common
 
     print("name,us_per_call,derived")
     print("# --- table1_overhead (smoke) ---")
-    metrics = bench_algo_overhead.smoke()
-    out = os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_algo_overhead.json",
+    out = _write_metrics(
+        "BENCH_algo_overhead.json", bench_algo_overhead.smoke()
     )
-    with open(out, "w") as f:
-        json.dump(metrics, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {len(common.ROWS)} rows; metrics -> {out}")
+    print("# --- runtime_adapt (smoke) ---")
+    out2 = _write_metrics(
+        "BENCH_runtime_adapt.json",
+        bench_runtime_adapt.smoke(),
+        kind="bench_runtime_adapt",
+    )
+    print(f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}")
 
 
 def main() -> None:
@@ -49,6 +66,7 @@ def main() -> None:
         bench_p2p_async,
         bench_p2p_inter,
         bench_p2p_intra,
+        bench_runtime_adapt,
         common,
     )
 
@@ -60,12 +78,18 @@ def main() -> None:
         ("fig8_moe", bench_moe_e2e),
         ("table1_overhead", bench_algo_overhead),
         ("vE_multitenant", bench_multitenant),
+        ("runtime_adapt", bench_runtime_adapt),
         ("kernels", bench_kernels),
     ]
     print("name,us_per_call,derived")
     for name, mod in sections:
         print(f"# --- {name} ---")
-        mod.run()
+        metrics = mod.run()
+        if name == "runtime_adapt" and metrics:
+            _write_metrics(
+                "BENCH_runtime_adapt.json", metrics,
+                kind="bench_runtime_adapt",
+            )
     out = os.path.join(os.path.dirname(__file__), "results.csv")
     with open(out, "w") as f:
         f.write("name,us_per_call,derived\n")

@@ -8,8 +8,14 @@ shapes (decode_32k / long_500k) lower in the dry-run.
 
 Run:
     PYTHONPATH=src python examples/serve_multiarch.py
+
+With ``--adaptive``, additionally routes a drifting expert-traffic trace
+through the execution-time orchestration runtime (telemetry -> estimate ->
+replan -> hot swap) and reports the adaptive-vs-static completion-time
+ratio — the serving-side view of DESIGN.md §3.
 """
 
+import sys
 import time
 
 import jax
@@ -28,7 +34,41 @@ FAMILIES = [
 ]
 
 
-def main():
+def adaptive_demo():
+    """Orchestration-runtime demo: serve a drifting expert-routing trace.
+
+    Models the communication side of MoE serving under shifting request
+    mix: the receive hotspot (the popular expert's device) migrates, the
+    runtime's telemetry/estimator detect the drift, and plans are re-solved
+    off the hot path and hot-swapped between rounds.
+    """
+    from repro.core.topology import Topology
+    from repro.runtime import (
+        OrchestrationRuntime,
+        drifting_skew_trace,
+        run_static,
+    )
+
+    n = 8
+    topo = Topology(n, group_size=4)
+    trace = drifting_skew_trace(n, windows=36, dwell=9)
+    runtime = OrchestrationRuntime(topo)
+    adaptive = runtime.run_trace(trace)
+    static = run_static(topo, trace)
+    speedup = static.total_completion_s / adaptive.total_completion_s
+    agg = runtime.telemetry.aggregate()
+    print(
+        f"[serve] adaptive runtime: {len(trace)} windows, "
+        f"{len(adaptive.replan_windows)} replans "
+        f"({adaptive.replan_fraction:.0%}), "
+        f"{runtime.cache_info()['hits']} cache hits, "
+        f"speedup vs static plan {speedup:.2f}x, "
+        f"link-util imbalance {agg['utilization_imbalance']:.2f}"
+    )
+    return speedup
+
+
+def main(adaptive: bool = False):
     rng = np.random.default_rng(0)
     for arch, family in FAMILIES:
         cfg = get_config(arch).reduced()
@@ -49,7 +89,9 @@ def main():
               f"batch=4 new=16x2 in {dt:5.1f}s  "
               f"greedy[0,:6]={greedy[0, :6].tolist()}")
     print("[serve] all families served batched requests deterministically")
+    if adaptive:
+        adaptive_demo()
 
 
 if __name__ == "__main__":
-    main()
+    main(adaptive="--adaptive" in sys.argv[1:])

@@ -1,6 +1,10 @@
 """Regenerate the EXPERIMENTS.md roofline tables from experiments/dryrun/*.json.
 
     PYTHONPATH=src python experiments/make_report.py > experiments/roofline_tables.md
+
+Also appends the execution-time orchestration section when the repo root
+holds a ``BENCH_runtime_adapt.json`` (tagged ``nimble.bench_runtime_adapt``
+via the shared ``repro.jsonio`` schema).
 """
 
 import glob
@@ -8,6 +12,7 @@ import json
 import os
 
 HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
 
 
 def load(pattern):
@@ -64,6 +69,40 @@ def multipod_status(recs):
               f"| {ro['dominant']} |")
 
 
+def runtime_adapt_section():
+    """Orchestration-runtime adaptation table from BENCH_runtime_adapt.json."""
+    path = os.path.join(ROOT, "BENCH_runtime_adapt.json")
+    if not os.path.exists(path):
+        return
+    try:
+        from repro.jsonio import read_json_file, schema_kind
+        rec = read_json_file(path)
+        kind = schema_kind(rec)
+    except ImportError:  # no PYTHONPATH=src; same on-disk format
+        rec = json.load(open(path))
+        kind = rec.get("schema", "").split(".", 1)[-1].rsplit("/", 1)[0]
+    if kind != "bench_runtime_adapt":
+        return
+    print("\n### Execution-time orchestration (drift / balance / fault)\n")
+    d, b, l = rec["drift"], rec["balanced"], rec["linkdown"]
+    print("| scenario | windows | result |")
+    print("|---|---|---|")
+    print(
+        f"| drifting skew | {d['windows']} | adaptive {d['adaptive_speedup']:.2f}x "
+        f"vs static (oracle {d['oracle_speedup']:.2f}x), "
+        f"{d['replans']} replans ({d['replan_fraction']:.0%}), "
+        f"{d['cache_hits']} cache hits |"
+    )
+    print(
+        f"| balanced | {b['windows']} | adaptive/static = "
+        f"{b['balanced_ratio']:.4f}, {b['balanced_replans']} replans |"
+    )
+    print(
+        f"| link down | {l['windows']} | fault@w{l['fail_window']}, "
+        f"replacement plan in {l['recovery_windows']} window(s) |"
+    )
+
+
 def main():
     base = load("*_16x16_nimble.json")
     opt = load("*_16x16_nimble_alt0.25_opt.json")
@@ -91,6 +130,7 @@ def main():
             print(f"| {key[0]} | {key[1]} | {b:.3e} | {o:.3e} "
                   f"| {b / o:.2f}x |")
     multipod_status(mp)
+    runtime_adapt_section()
 
 
 if __name__ == "__main__":

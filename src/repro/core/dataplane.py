@@ -103,6 +103,9 @@ class NimbleAllToAll:
         if self.cfg.chunk_bytes != chunk_bytes:
             self.cfg = dataclasses.replace(self.cfg, chunk_bytes=chunk_bytes)
         self.rel_of_pair = build_rel_of_pair(n_devices, group_size)
+        # optional execution-time telemetry sink (runtime.LinkTelemetry):
+        # host-driven plan_batch calls harvest planned resource loads into it
+        self.telemetry = None
 
         n, G = n_devices, group_size
         rels = self.sched.rels
@@ -165,6 +168,18 @@ class NimbleAllToAll:
             self.cfg.chunk_bytes,
         )
 
+    def attach_telemetry(self, sink) -> None:
+        """Attach a ``runtime.LinkTelemetry`` (or duck-typed) sink.
+
+        Subsequent host-driven :meth:`plan_batch` calls record each planned
+        demand matrix and its per-resource loads via ``sink.record_loads``
+        (self-numbered windows), feeding the orchestration runtime's
+        monitor stage from real plan executions without touching the jitted
+        dataplane path.  Only ``mode="nimble"`` produces a load vector —
+        the static baselines plan elementwise and record nothing.
+        """
+        self.telemetry = sink
+
     def plan_batch(self, demand_chunks: jnp.ndarray) -> jnp.ndarray:
         """Plan a batch of demand matrices in one call: [B, n, n] -> [B, n, n, K].
 
@@ -177,7 +192,14 @@ class NimbleAllToAll:
         if self.mode != "nimble":
             return jax.vmap(self._plan)(demand_chunks)
         D = demand_chunks.astype(jnp.float32) * jnp.float32(self.cfg.chunk_bytes)
-        flows, _ = plan_flows_batch(D, self.tables, self.cfg)
+        flows, loads = plan_flows_batch(D, self.tables, self.cfg)
+        if self.telemetry is not None and not isinstance(D, jax.core.Tracer):
+            # strip the trailing dummy resource the planner pads with
+            loads_np = np.asarray(loads)[:, :-1]
+            D_np = np.asarray(D)
+            for b in range(loads_np.shape[0]):
+                self.telemetry.record_loads(None, loads_np[b],
+                                            pair_bytes=D_np[b])
         return jax.vmap(
             lambda f, dc: quantize_chunks(
                 f, dc, self.sched.S, self.rel_of_pair, self.cfg.chunk_bytes

@@ -22,11 +22,13 @@ dataplane on forced host devices.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping
+from typing import Dict, List, Mapping
 
 import numpy as np
 
-from .mcf import PairKey, Plan
+from ..jsonio import json_dumps, tag
+from .incidence import incidence_for
+from .mcf import PairKey, Plan, RoutedFlow
 
 
 @dataclasses.dataclass
@@ -51,12 +53,33 @@ class SimResult:
             return f"relay[{rid - E}]"
         return f"inject[{rid - E - n}]"
 
+    # -- serialization (shared schema, repro.jsonio) --------------------------
+    def to_json_obj(self) -> dict:
+        """Tagged dict (``nimble.simresult/v1``) for cross-file consumers."""
+        return tag(
+            "simresult",
+            {
+                "completion_time_s": float(self.completion_time),
+                "total_payload_bytes": float(self.total_payload),
+                "effective_bandwidth_gbs": self.bandwidth_gbs(),
+                "bottleneck_resource": int(self.bottleneck_resource),
+                "per_resource_time_s": [
+                    float(x) for x in self.per_resource_time
+                ],
+                "per_resource_util": [
+                    float(x) for x in self.per_resource_util
+                ],
+            },
+        )
 
-def simulate(plan: Plan, chunk_bytes: float = 1 << 20) -> SimResult:
+    def to_json(self, *, indent: bool = False) -> bytes:
+        return json_dumps(self.to_json_obj(), indent=indent)
+
+
+def _pipeline_fill_reference(plan: Plan, chunk_bytes: float) -> np.ndarray:
+    """Reference per-flow fill loop (kept for the equivalence test)."""
     rm = plan.rm
-    drain = plan.resource_bytes / rm.capacity
-    # pipeline fill: charged once per multi-hop path on its bottleneck resource
-    fill = np.zeros_like(drain)
+    fill = np.zeros(rm.n_resources)
     for key, flows in plan.consolidated().items():
         for f in flows:
             if f.path.n_relays > 0 and f.bytes > 0:
@@ -64,6 +87,73 @@ def simulate(plan: Plan, chunk_bytes: float = 1 << 20) -> SimResult:
                 extra = (f.path.n_hops - 1) * min(chunk_bytes, f.bytes) / caps.min()
                 for l in f.path.links:
                     fill[l] = max(fill[l], extra)
+    return fill
+
+
+#: below this many relayed flows the scalar loop beats a (possibly cold)
+#: O(n²K) incidence-table fetch — e.g. one-shot simulations of host plans
+#: on fingerprints outside the table cache
+_VECTORIZE_MIN_FLOWS = 8
+
+
+def _pipeline_fill(plan: Plan, chunk_bytes: float) -> np.ndarray:
+    """Vectorized pipeline-fill: per-path bottleneck caps come precomputed
+    from the shared incidence tables (``path_link_min_cap`` / ``path_links``)
+    instead of being re-derived per flow; values are bit-identical to
+    :func:`_pipeline_fill_reference`.  Plans with few relayed flows take
+    the scalar loop — not worth a table build."""
+    rm = plan.rm
+    n_res = rm.n_resources
+    relayed: List[RoutedFlow] = [
+        f
+        for flows in plan.consolidated().values()
+        for f in flows
+        if f.path.n_relays > 0 and f.bytes > 0
+    ]
+    # extra slot collects the -1 padding scatter so real rows stay exact
+    buf = np.zeros(n_res + 1)
+    slow: List[RoutedFlow] = []
+    if len(relayed) < _VECTORIZE_MIN_FLOWS:
+        slow = relayed
+    else:
+        inc = incidence_for(plan.topo, rm.cm)
+        pid_of = inc.path_index
+        pids: List[int] = []
+        byts: List[float] = []
+        for f in relayed:
+            pid = pid_of.get(f.path)
+            if pid is None:   # path unknown to the tables (none expected)
+                slow.append(f)
+            else:
+                pids.append(pid)
+                byts.append(f.bytes)
+        if pids:
+            pid_a = np.asarray(pids, dtype=np.int64)
+            b = np.asarray(byts, dtype=np.float64)
+            extra = (
+                (inc.path_n_hops[pid_a] - 1)
+                * np.minimum(chunk_bytes, b)
+                / inc.path_link_min_cap[pid_a]
+            )
+            links = inc.path_links[pid_a]             # [F, MAX_HOPS]
+            np.maximum.at(
+                buf,
+                np.where(links >= 0, links, n_res).ravel(),
+                np.repeat(extra, links.shape[1]),
+            )
+    for f in slow:
+        caps = rm.topo.capacity[list(f.path.links)]
+        extra = (f.path.n_hops - 1) * min(chunk_bytes, f.bytes) / caps.min()
+        for l in f.path.links:
+            buf[l] = max(buf[l], extra)
+    return buf[:n_res]
+
+
+def simulate(plan: Plan, chunk_bytes: float = 1 << 20) -> SimResult:
+    rm = plan.rm
+    drain = plan.resource_bytes / rm.capacity
+    # pipeline fill: charged once per multi-hop path on its bottleneck resource
+    fill = _pipeline_fill(plan, chunk_bytes)
     per_res = drain + fill
     t = float(per_res.max()) if len(per_res) else 0.0
     total = float(sum(sum(x.bytes for x in v) for v in plan.flows.values()))

@@ -28,6 +28,7 @@ treat them as immutable.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Dict, List, Optional, Tuple
@@ -40,6 +41,9 @@ from .topology import INTRA, Topology
 
 #: fixed dense row width: 3 links + src inject + 2 relays + 2 relay injects
 MAX_CHARGE = 8
+
+#: max links per candidate path (3-stage normalized schedule)
+MAX_HOPS = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +62,7 @@ class PairCandidates:
     mask: np.ndarray      # [n*n, K, MAX_CHARGE] bool (mult > 0)
     penalty: np.ndarray   # [n*n, K] float32
     relay: np.ndarray     # [n*n, K] bool
+    min_cap: np.ndarray   # [n*n, K] float64 — path bottleneck capacity
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +85,9 @@ class PathIncidence:
     path_penalty: np.ndarray    # [P] float32 — fill/flush seconds
     path_relay: np.ndarray      # [P] bool — has relay GPUs (threshold gate)
     path_min_cap: np.ndarray    # [P] float64 — bottleneck capacity
+    path_links: np.ndarray      # [P, MAX_HOPS] int32 link ids, -1-padded
+    path_n_hops: np.ndarray     # [P] int32 — len(links)
+    path_link_min_cap: np.ndarray  # [P] float64 — min over *link* caps only
     pair_path_ids: np.ndarray   # [n*n, K] int32, -1 invalid/self
     # CSR form over real resources (host sweeps):
     indptr: np.ndarray          # [P + 1] int32
@@ -108,7 +116,18 @@ class PathIncidence:
             mask=_freeze(mult > 0),
             penalty=_freeze(self.path_penalty[c]),
             relay=_freeze(self.path_relay[c]),
+            min_cap=_freeze(self.path_min_cap[c]),
         )
+
+    @functools.cached_property
+    def path_index(self) -> Dict[Path, int]:
+        """Concrete :class:`Path` -> path id, for host-plan lookups.
+
+        Host plans (``mcf``) and the incidence enumerate identical routes,
+        so flows can be mapped back to their precomputed per-path metadata
+        (``fabsim``'s vectorized pipeline-fill) without re-walking links.
+        """
+        return {p: i for i, p in enumerate(self.paths) if p is not None}
 
     def charges_of(self, pid: int) -> List[Tuple[int, float]]:
         """CSR row of path ``pid`` as (resource_id, multiplier) pairs."""
@@ -157,6 +176,9 @@ def _build(topo: Topology, cm: CostModel) -> PathIncidence:
     pen = np.zeros(P, dtype=np.float32)
     relay = np.zeros(P, dtype=bool)
     min_caps = np.full(P, np.inf)
+    plinks = np.full((P, MAX_HOPS), -1, dtype=np.int32)
+    pn_hops = np.zeros(P, dtype=np.int32)
+    plink_min = np.full(P, np.inf)
     pair_paths = np.full((n * n, K), -1, dtype=np.int32)
     indptr = np.zeros(P + 1, dtype=np.int32)
     idx_flat: List[int] = []
@@ -194,6 +216,9 @@ def _build(topo: Topology, cm: CostModel) -> PathIncidence:
                         pen[pid] = cm.hop_setup_bytes * (len(nodes) - 2) / min_cap
                         relay[pid] = True
                     min_caps[pid] = min_cap
+                    plinks[pid, : len(links)] = links
+                    pn_hops[pid] = len(links)
+                    plink_min[pid] = topo.capacity[links].min()
                     pair_paths[s * n + d, k] = pid
                     idx_flat.extend(int(r) for r in rids[pid, :c])
                     mult_flat.extend(float(m) for m in mult[pid, :c])
@@ -218,6 +243,9 @@ def _build(topo: Topology, cm: CostModel) -> PathIncidence:
         path_penalty=_freeze(pen),
         path_relay=_freeze(relay),
         path_min_cap=_freeze(min_caps),
+        path_links=_freeze(plinks),
+        path_n_hops=_freeze(pn_hops),
+        path_link_min_cap=_freeze(plink_min),
         pair_path_ids=_freeze(pair_paths),
         indptr=_freeze(indptr),
         indices=_freeze(np.asarray(idx_flat, dtype=np.int32)),
@@ -228,7 +256,13 @@ def _build(topo: Topology, cm: CostModel) -> PathIncidence:
 
 # -- topology-keyed cache ------------------------------------------------------
 
-_CACHE: Dict[tuple, PathIncidence] = {}
+_CACHE: "collections.OrderedDict[tuple, PathIncidence]" = (
+    collections.OrderedDict()
+)
+#: LRU bound: topology events (link down/degrade) mint a fresh fingerprint
+#: per distinct scale map, so the cache must evict or a long fault-injection
+#: run would leak one O(n² K) table set per fault state
+_CACHE_CAP = 64
 _HITS = 0
 _MISSES = 0
 
@@ -246,10 +280,13 @@ def incidence_for(topo: Topology, cm: CostModel | None = None) -> PathIncidence:
     hit = _CACHE.get(key)
     if hit is not None:
         _HITS += 1
+        _CACHE.move_to_end(key)
         return hit
     _MISSES += 1
     inc = _build(topo, cm)
     _CACHE[key] = inc
+    while len(_CACHE) > _CACHE_CAP:
+        _CACHE.popitem(last=False)
     return inc
 
 

@@ -292,6 +292,29 @@ def _solve_mwu_sequential(
     return Plan(topo, rm, flows, loads, raw, it)
 
 
+def pxn_path(topo: Topology, key: PairKey) -> Path:
+    """Static fastest path for ``key``: intra direct, else the PXN rail.
+
+    PXN (NCCL v2.12+, §II-B): inter-node traffic uses the rail matching the
+    *destination* chip, staging intra-node at the source side if needed.
+    This is the per-pair rule of :func:`solve_direct`, exposed so stale-plan
+    execution (``apply_plan_fractions``) can route previously-unseen pairs
+    exactly like the static baseline would.
+    """
+    cands = all_pairs_paths(topo)[key]
+    if topo.same_group(*key):
+        return next(p for p in cands if p.family == DIRECT)
+    dest_rail = topo.rail_of(key[1])
+
+    def rail_of_path(p: Path) -> int:
+        for l in p.links:
+            if topo.kind[l] != INTRA:
+                return topo.rail_of(topo.links[l].src)
+        return -1
+
+    return next(p for p in cands if rail_of_path(p) == dest_rail)
+
+
 def solve_direct(
     topo: Topology,
     demands: Mapping[PairKey, float],
@@ -299,26 +322,13 @@ def solve_direct(
 ) -> Plan:
     """NCCL/MPI-style static fastest-path baseline with PXN rail selection."""
     rm = ResourceModel(topo, cost_model)
-    path_table = all_pairs_paths(topo)
     loads = np.zeros(rm.n_resources, dtype=np.float64)
     raw = np.zeros(topo.n_links, dtype=np.float64)
     flows: Dict[PairKey, List[RoutedFlow]] = {}
     for key, d in demands.items():
         if d <= 0 or key[0] == key[1]:
             continue
-        cands = path_table[key]
-        if topo.same_group(*key):
-            path = next(p for p in cands if p.family == DIRECT)
-        else:
-            # PXN: use the rail matching the *destination* chip, staging
-            # intra-node at the source side if needed (NCCL v2.12+, §II-B).
-            dest_rail = topo.rail_of(key[1])
-            def rail_of_path(p: Path) -> int:
-                for l in p.links:
-                    if topo.kind[l] != INTRA:
-                        return topo.rail_of(topo.links[l].src)
-                return -1
-            path = next(p for p in cands if rail_of_path(p) == dest_rail)
+        path = pxn_path(topo, key)
         _route(loads, raw, rm, path, float(d))
         flows[key] = [RoutedFlow(path, float(d))]
     return Plan(topo, rm, flows, loads, raw, 1)
@@ -349,6 +359,93 @@ def solve_static_striping(
             _route(loads, raw, rm, p, f)
             flows[key].append(RoutedFlow(p, f))
     return Plan(topo, rm, flows, loads, raw, 1)
+
+
+# -- plan bridges (orchestration runtime) ---------------------------------------
+
+def plan_from_flows(
+    topo: Topology,
+    flows_nnK: np.ndarray,
+    demands: Mapping[PairKey, float],
+    cost_model: CostModel | None = None,
+    iterations: int = 0,
+) -> Plan:
+    """Materialize a host :class:`Plan` from jitted planner output.
+
+    ``flows_nnK`` is the ``[n, n, K]`` per-candidate byte assignment of
+    ``planner.plan_flows`` / ``plan_flows_batch`` (one batch entry).  Each
+    pair's flows are rescaled to sum *exactly* to its demand (the jit loop
+    runs in float32), attached to the concrete routes of the shared
+    incidence tables, and recharged onto a fresh resource vector — so the
+    returned plan simulates and reports identically to a host-solved one.
+    """
+    rm = ResourceModel(topo, cost_model)
+    inc = incidence_for(topo, rm.cm)
+    n, K = topo.n_devices, inc.K
+    loads = np.zeros(rm.n_resources, dtype=np.float64)
+    raw = np.zeros(topo.n_links, dtype=np.float64)
+    flows: Dict[PairKey, List[RoutedFlow]] = {}
+    for (s, d), dem in demands.items():
+        if dem <= 0 or s == d:
+            continue
+        row = np.asarray(flows_nnK[s, d], dtype=np.float64)
+        tot = float(row.sum())
+        scale = float(dem) / tot if tot > 0 else 0.0
+        fl: List[RoutedFlow] = []
+        for k in range(K):
+            pid = int(inc.pair_path_ids[s * n + d, k])
+            if pid < 0:
+                continue
+            b = float(row[k]) * scale if tot > 0 else (
+                float(dem) if k == 0 else 0.0
+            )
+            if b <= 0:
+                continue
+            fl.append(RoutedFlow(inc.paths[pid], b))
+            _route(loads, raw, rm, inc.paths[pid], b)
+        flows[(s, d)] = fl
+    return Plan(topo, rm, flows, loads, raw, iterations)
+
+
+def apply_plan_fractions(
+    plan: Plan,
+    demands: Mapping[PairKey, float],
+    topo: Topology | None = None,
+    cost_model: CostModel | None = None,
+) -> Plan:
+    """Execute a (possibly stale) plan's per-pair split ratios on new demand.
+
+    This is what actually happens between replans: the dataplane keeps
+    moving traffic along the last plan's paths while the demand drifts
+    underneath it.  Each pair's new demand is split across the old plan's
+    paths proportionally to their planned bytes; pairs the old plan never
+    routed fall back to the static PXN rule (:func:`pxn_path`).  ``topo``
+    may differ from ``plan.topo`` in link capacities (degradation events) —
+    geometry must match, since paths are reused by link id.
+    """
+    topo = topo if topo is not None else plan.topo
+    rm = ResourceModel(topo, cost_model or plan.rm.cm)
+    stale = plan.consolidated()
+    loads = np.zeros(rm.n_resources, dtype=np.float64)
+    raw = np.zeros(topo.n_links, dtype=np.float64)
+    flows: Dict[PairKey, List[RoutedFlow]] = {}
+    for key, dem in demands.items():
+        if dem <= 0 or key[0] == key[1]:
+            continue
+        old = stale.get(key)
+        tot = sum(f.bytes for f in old) if old else 0.0
+        if tot > 0:
+            fl = [
+                RoutedFlow(f.path, float(dem) * f.bytes / tot)
+                for f in old
+                if f.bytes > 0
+            ]
+        else:
+            fl = [RoutedFlow(pxn_path(topo, key), float(dem))]
+        for f in fl:
+            _route(loads, raw, rm, f.path, f.bytes)
+        flows[key] = fl
+    return Plan(topo, rm, flows, loads, raw, plan.iterations)
 
 
 # -- optimality accounting ------------------------------------------------------

@@ -54,14 +54,25 @@ class MoECommConfig:
 
 
 class MoEDispatcher:
-    """Stateless (per-shape) dispatch/combine helper.  Use inside shard_map."""
+    """Stateless (per-shape) dispatch/combine helper.  Use inside shard_map.
+
+    ``runtime`` optionally routes dispatch planning through an
+    :class:`~repro.runtime.controller.OrchestrationRuntime`: host-driven
+    batched plans feed its telemetry/estimator (via the dataplane's
+    telemetry sink and ``runtime.observe_dispatch``), so drifting expert
+    popularity shows up in the runtime's replan loop.  The jitted
+    per-invocation dispatch path is unchanged — the runtime observes from
+    the host side only.
+    """
 
     def __init__(self, axis_name: str, cfg: MoECommConfig,
-                 planner_cfg: Optional[PlannerConfig] = None):
+                 planner_cfg: Optional[PlannerConfig] = None,
+                 runtime=None):
         self.axis = axis_name
         self.cfg = cfg
         self._comms = {}
         self._planner_cfg = planner_cfg
+        self.runtime = runtime
 
     # -- static geometry -------------------------------------------------------
     def capacity_tokens(self, n_assign: int) -> int:
@@ -77,7 +88,7 @@ class MoEDispatcher:
                 self.cfg.chunk_tokens * self.cfg.d_model
                 * jnp.dtype(self.cfg.payload_dtype).itemsize
             )
-            self._comms[key] = NimbleAllToAll(
+            comm = NimbleAllToAll(
                 self.axis,
                 self.cfg.n_devices,
                 self.cfg.group_size,
@@ -87,6 +98,9 @@ class MoEDispatcher:
                 planner_cfg=self._planner_cfg,
                 mode=self.cfg.mode,
             )
+            if self.runtime is not None:
+                comm.attach_telemetry(self.runtime.telemetry)
+            self._comms[key] = comm
         return self._comms[key]
 
     def plan_batched(
@@ -105,6 +119,18 @@ class MoEDispatcher:
         cap_tok = self.capacity_tokens(n_assign)
         C = cap_tok // cfg.chunk_tokens
         comm = self._comm(C, cfg.chunk_tokens * cfg.d_model)
+        if self.runtime is not None and not isinstance(
+            demand_chunks, jax.core.Tracer
+        ):
+            # feed the dispatch demand into the runtime's estimator so MoE
+            # expert-popularity drift participates in its replan decisions;
+            # one update per batch entry, matching the per-window records
+            # the telemetry sink takes in plan_batch
+            D = np.asarray(demand_chunks, dtype=np.float64) * float(
+                comm.cfg.chunk_bytes
+            )
+            for b in range(D.shape[0]):
+                self.runtime.estimator.update(D[b])
         return comm.plan_batch(demand_chunks)
 
     # -- dispatch ----------------------------------------------------------------
@@ -130,7 +156,7 @@ class MoEDispatcher:
 
         dest = (expert_idx // cfg.experts_per_device).reshape(A)  # [A]
         if token_valid is not None:
-            # unowned tokens (replicated-token mode, DESIGN.md §5): route to
+            # unowned tokens (replicated-token mode, DESIGN.md §6): route to
             # a sentinel so they never enter any send buffer.
             avalid = jnp.repeat(token_valid, k)
             dest = jnp.where(avalid, dest, n)                      # sentinel

@@ -15,6 +15,7 @@ negative returns beyond one intra-node hop).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Tuple
 
@@ -84,7 +85,11 @@ def enumerate_paths(topo: Topology, s: int, d: int) -> List[Path]:
     return out
 
 
-_PATHS_CACHE: Dict[tuple, Dict[Tuple[int, int], List[Path]]] = {}
+_PATHS_CACHE: "collections.OrderedDict[tuple, Dict[Tuple[int, int], List[Path]]]" = (
+    collections.OrderedDict()
+)
+#: LRU bound — link events mint fresh fingerprints (see incidence._CACHE_CAP)
+_PATHS_CACHE_CAP = 64
 
 
 def all_pairs_paths(topo: Topology) -> Dict[Tuple[int, int], List[Path]]:
@@ -96,6 +101,7 @@ def all_pairs_paths(topo: Topology) -> Dict[Tuple[int, int], List[Path]]:
     """
     hit = _PATHS_CACHE.get(topo.fingerprint)
     if hit is not None:
+        _PATHS_CACHE.move_to_end(topo.fingerprint)
         return hit
     table: Dict[Tuple[int, int], List[Path]] = {}
     for s in range(topo.n_devices):
@@ -103,6 +109,8 @@ def all_pairs_paths(topo: Topology) -> Dict[Tuple[int, int], List[Path]]:
             if s != d:
                 table[(s, d)] = enumerate_paths(topo, s, d)
     _PATHS_CACHE[topo.fingerprint] = table
+    while len(_PATHS_CACHE) > _PATHS_CACHE_CAP:
+        _PATHS_CACHE.popitem(last=False)
     return table
 
 

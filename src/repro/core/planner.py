@@ -45,6 +45,15 @@ from .jax_compat import pvary
 from .schedule import PlannerTables
 
 _BIG = 1e30
+# price tiers above any real path cost: a small-message-gated relay path is
+# preferable to a *down* path, which is preferable to K-padding.  On a
+# healthy fabric nothing is down, and the tiering reduces to the original
+# single-_BIG mask (argmin tie-break picks k=0), so plans are unchanged.
+_BIG_DOWN = 1e32
+_BIG_INVALID = 1e34
+#: paths whose bottleneck capacity falls below this are treated as down
+#: (see topology.DOWN_CAP); no real interconnect link is below 1 B/s
+_DEAD_PATH_CAP = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,10 +92,13 @@ def plan_flows(
     if prev_loads is not None:
         loads0 = jnp.float32(cfg.hysteresis) * prev_loads
 
-    # static price-out mask: K-padding always, relay paths for small messages
-    dead = jnp.asarray(~pcand.valid) | (
-        jnp.asarray(pcand.relay) & (msg[:, None] <= cfg.split_threshold)
-    )  # [n*n, K]
+    # static price-out tiers: relay paths for small messages (_BIG), down
+    # paths — bottleneck capacity below _DEAD_PATH_CAP after a link event —
+    # (_BIG_DOWN), K-padding (_BIG_INVALID)
+    small = jnp.asarray(pcand.relay) & (msg[:, None] <= cfg.split_threshold)
+    down_np = pcand.valid & (pcand.min_cap < _DEAD_PATH_CAP)  # [n*n, K]
+    invalid = jnp.asarray(~pcand.valid)
+    down = jnp.asarray(down_np)
 
     def body(_, state):
         flows, res, loads = state
@@ -94,7 +106,9 @@ def plan_flows(
         pcK = (
             jnp.max(costs[cand_rids] * cand_mask, axis=-1) + cand_pen
         )                                                           # [n*n, K]
-        pcK = jnp.where(dead, _BIG, pcK)
+        pcK = jnp.where(small, _BIG, pcK)
+        pcK = jnp.where(down, _BIG_DOWN, pcK)
+        pcK = jnp.where(invalid, _BIG_INVALID, pcK)
         best_k = jnp.argmin(pcK, axis=-1)                           # [n*n]
         # Algorithm 1 lines 24-28: quantized λ-fraction of the residual
         f = jnp.where(
@@ -124,8 +138,14 @@ def plan_flows(
     flows, res, loads = jax.lax.fori_loop(
         0, cfg.n_iters, body, (flows, D, loads0)
     )
-    # residual after T iterations -> least-hop path (k=0)
-    flows = flows.at[:, 0].add(res)
+    # residual after T iterations -> least-hop *alive* path (k=0 on a
+    # healthy fabric; the first non-down candidate after a link event)
+    alive = pcand.valid & ~down_np
+    k_dump = np.where(alive.any(-1), np.argmax(alive, axis=-1), 0)
+    if (k_dump == 0).all():
+        flows = flows.at[:, 0].add(res)
+    else:
+        flows = flows.at[jnp.arange(n * n), jnp.asarray(k_dump)].add(res)
     return flows.reshape(n, n, K), loads
 
 

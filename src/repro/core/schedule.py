@@ -28,6 +28,7 @@ with a static SPMD program.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -155,7 +156,11 @@ class CommSchedule:
         return pairs
 
 
-_SCHED_CACHE: Dict[tuple, CommSchedule] = {}
+_SCHED_CACHE: "collections.OrderedDict[tuple, CommSchedule]" = (
+    collections.OrderedDict()
+)
+#: LRU bound — link events mint fresh fingerprints (see incidence._CACHE_CAP)
+_SCHED_CACHE_CAP = 64
 
 
 def build_schedule(
@@ -170,9 +175,12 @@ def build_schedule(
     key = (topology_fingerprint(topo), int(C), float(alt_frac))
     hit = _SCHED_CACHE.get(key)
     if hit is not None:
+        _SCHED_CACHE.move_to_end(key)
         return hit
     sched = _build_schedule(topo, C, alt_frac)
     _SCHED_CACHE[key] = sched
+    while len(_SCHED_CACHE) > _SCHED_CACHE_CAP:
+        _SCHED_CACHE.popitem(last=False)
     return sched
 
 

@@ -20,7 +20,7 @@ and can be swapped for TPU v5e ICI constants via :class:`LinkCaps`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Mapping, Tuple
 
 import numpy as np
 
@@ -28,6 +28,12 @@ import numpy as np
 INTRA = 0  # chip->chip inside a node group (NVLink / intra-group ICI)
 RAIL = 1   # rail-matched chip_i(groupA) -> chip_i(groupB), same pod
 DCI = 2    # rail-matched, crossing a pod boundary
+
+#: capacity (bytes/s) assigned to a *down* link (scale <= 0).  Non-zero so
+#: load/capacity cost and drain-time math never divide by zero; any traffic
+#: actually routed onto a down link shows up as a catastrophic completion
+#: time, which is what the orchestration runtime's replan loop reacts to.
+DOWN_CAP = 1e-3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +72,7 @@ class Topology:
         group_size: int = 4,
         n_pods: int = 1,
         caps: LinkCaps | None = None,
+        link_scale: Mapping[Tuple[int, int], float] | None = None,
     ):
         if n_devices % group_size != 0:
             raise ValueError(
@@ -82,10 +89,21 @@ class Topology:
         self.n_pods = n_pods
         self.groups_per_pod = n_groups // n_pods
         self.caps = caps or LinkCaps()
+        # per-link capacity scale (fault / degradation events): (src, dst) ->
+        # scale in [0, 1]; scale <= 0 means *down* (capacity DOWN_CAP).
+        # Entries equal to 1.0 are dropped so the fingerprint stays canonical.
+        self.link_scale: Dict[Tuple[int, int], float] = {
+            (int(s), int(d)): float(sc)
+            for (s, d), sc in (link_scale or {}).items()
+            if float(sc) != 1.0
+        }
 
         self.links: List[Link] = []
         self._by_endpoints: Dict[Tuple[int, int], int] = {}
         self._build()
+        for s, d in self.link_scale:
+            if (s, d) not in self._by_endpoints:
+                raise KeyError(f"link_scale names nonexistent link {s}->{d}")
 
         self.capacity = np.array([l.capacity for l in self.links], dtype=np.float64)
         self.kind = np.array([l.kind for l in self.links], dtype=np.int32)
@@ -93,7 +111,10 @@ class Topology:
     # -- construction ---------------------------------------------------------
     def _add(self, src: int, dst: int, kind: int) -> int:
         lid = len(self.links)
-        self.links.append(Link(lid, src, dst, kind, self.caps.of(kind)))
+        cap = self.caps.of(kind)
+        scale = self.link_scale.get((src, dst), 1.0)
+        cap = cap * scale if scale > 0.0 else DOWN_CAP
+        self.links.append(Link(lid, src, dst, kind, cap))
         self._by_endpoints[(src, dst)] = lid
         return lid
 
@@ -131,7 +152,35 @@ class Topology:
             float(self.caps.intra),
             float(self.caps.rail),
             float(self.caps.dci),
+            tuple(sorted(self.link_scale.items())),
         )
+
+    # -- fault / degradation events -------------------------------------------
+    def with_link_scale(
+        self, overrides: Mapping[Tuple[int, int], float]
+    ) -> "Topology":
+        """New :class:`Topology` with per-link capacity scales replaced.
+
+        ``overrides`` maps ``(src, dst)`` endpoints to a new scale: ``0``
+        marks the link *down* (capacity :data:`DOWN_CAP`), values in (0, 1)
+        model degradation, and ``1.0`` restores the link.  Scales compose by
+        replacement, not multiplication, so restoring is idempotent.  The
+        link *geometry* (ids, kinds) is unchanged — only capacities move —
+        which keeps candidate-path enumeration and slot schedules valid
+        while forcing fresh incidence tables via the fingerprint.
+        """
+        merged = dict(self.link_scale)
+        for (s, d), sc in overrides.items():
+            if (s, d) not in self._by_endpoints:
+                raise KeyError(f"no link {s}->{d} in topology")
+            merged[(int(s), int(d))] = float(sc)
+        return Topology(
+            self.n_devices, self.group_size, self.n_pods, self.caps, merged
+        )
+
+    def down_link_ids(self) -> List[int]:
+        """Link ids currently marked down (capacity == DOWN_CAP)."""
+        return [l.lid for l in self.links if l.capacity <= DOWN_CAP]
 
     # -- lookups --------------------------------------------------------------
     def pod_of_group(self, g: int) -> int:

@@ -1,8 +1,15 @@
 """JSON bytes IO with an orjson fast path and a stdlib fallback.
 
-The container may not ship ``orjson``; both writers (checkpoint index,
-dry-run records) use these helpers so the fallback lives in one place and
-the on-disk format stays identical either way.
+The container may not ship ``orjson``; all writers (checkpoint index,
+dry-run records, fabric-sim results, runtime telemetry, benches) use these
+helpers so the fallback lives in one place and the on-disk format stays
+identical either way.
+
+Records that cross files (fabsim results, telemetry windows, runtime trace
+summaries, bench outputs) share one envelope: :func:`tag` stamps a
+``schema`` field of the form ``nimble.<kind>/v<version>`` so
+``experiments/make_report.py`` and the benches can consume each other's
+output without per-file format knowledge.
 """
 
 from __future__ import annotations
@@ -24,3 +31,52 @@ except ImportError:  # stdlib fallback — same on-disk format, just slower
 
     def json_loads(data: bytes):
         return json.loads(data)
+
+
+# -- shared record schema -------------------------------------------------------
+
+SCHEMA_PREFIX = "nimble"
+
+
+def tag(kind: str, payload: dict, version: int = 1) -> dict:
+    """Wrap ``payload`` in the shared record envelope.
+
+    Adds a ``schema`` field (``nimble.<kind>/v<version>``) for consumers to
+    dispatch on; ``payload`` keys are carried unchanged.  Key *order* is
+    not part of the contract — file writers sort keys for diff stability.
+    """
+    return {"schema": f"{SCHEMA_PREFIX}.{kind}/v{version}", **payload}
+
+
+def schema_kind(record: dict) -> str:
+    """Extract ``<kind>`` from a tagged record ('' if untagged)."""
+    schema = record.get("schema", "")
+    if "." not in schema or "/" not in schema:
+        return ""
+    return schema.split(".", 1)[1].rsplit("/", 1)[0]
+
+
+def write_json_file(path: str, obj, *, indent: bool = True) -> None:
+    """Serialize ``obj`` to ``path`` with sorted keys + trailing newline.
+
+    Sorted keys keep git-tracked artifacts (bench metrics, reports) free of
+    pure key-reordering churn between runs.
+    """
+    with open(path, "wb") as f:
+        f.write(json_dumps(_sorted(obj), indent=indent))
+        f.write(b"\n")
+
+
+def _sorted(obj):
+    """Recursively sort dict keys (orjson has no stdlib sort_keys knob for
+    nested tuples-in-dataclasses, so normalize before dumping)."""
+    if isinstance(obj, dict):
+        return {k: _sorted(obj[k]) for k in sorted(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [_sorted(x) for x in obj]
+    return obj
+
+
+def read_json_file(path: str):
+    with open(path, "rb") as f:
+        return json_loads(f.read())

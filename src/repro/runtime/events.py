@@ -1,0 +1,105 @@
+"""Topology events — link degradation, link down, link restore.
+
+The paper's runtime is defined against a fabric that *changes*: congestion
+from cross-traffic, but also NIC flaps and switch-port brownouts that no
+one-shot plan can anticipate.  A :class:`LinkEvent` rescales one directed
+link's capacity at a window boundary; the controller applies due events by
+deriving a new :class:`~repro.core.topology.Topology` via
+``with_link_scale`` — same geometry, new capacities, new fingerprint — so
+the planner core rebuilds (and re-caches) incidence tables for the degraded
+fabric, and the policy force-replans.
+
+Scales: ``0.0`` = down (capacity ``topology.DOWN_CAP``), ``(0, 1)`` =
+degraded, ``1.0`` = restored.  Events compose by replacement, so a restore
+after a degrade returns the link to its calibrated capacity exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterable, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class LinkEvent:
+    """Rescale link ``src -> dst`` to ``scale`` at ``window``."""
+
+    window: int
+    src: int
+    dst: int
+    scale: float
+
+    @property
+    def kind(self) -> str:
+        if self.scale <= 0.0:
+            return "link_down"
+        if self.scale >= 1.0:
+            return "link_restored"
+        return "link_degraded"
+
+    def describe(self) -> str:
+        extra = "" if self.scale in (0.0, 1.0) else f" x{self.scale:g}"
+        return f"{self.kind}[{self.src}->{self.dst}]@w{self.window}{extra}"
+
+
+def link_down(window: int, src: int, dst: int) -> LinkEvent:
+    return LinkEvent(window, src, dst, 0.0)
+
+
+def link_degraded(window: int, src: int, dst: int, scale: float) -> LinkEvent:
+    if not 0.0 < scale < 1.0:
+        raise ValueError(f"degraded scale must be in (0, 1), got {scale}")
+    return LinkEvent(window, src, dst, scale)
+
+
+def link_restored(window: int, src: int, dst: int) -> LinkEvent:
+    return LinkEvent(window, src, dst, 1.0)
+
+
+class EventLog:
+    """Window-ordered queue of scheduled topology events.
+
+    Events due in the same window pop in **schedule order** (a per-log
+    sequence number breaks heap ties), so "last one wins" in
+    :meth:`overrides` means the last *scheduled*, not an accident of how
+    scales happen to sort.
+    """
+
+    def __init__(self, events: Iterable[LinkEvent] = ()):
+        self._heap: List[tuple] = []   # (window, seq, event)
+        self._seq = 0
+        for ev in events:
+            self.schedule(ev)
+
+    def schedule(self, event: LinkEvent) -> None:
+        heapq.heappush(self._heap, (event.window, self._seq, event))
+        self._seq += 1
+
+    def pop_due(self, window: int) -> List[LinkEvent]:
+        """All events with ``event.window <= window``, in schedule order."""
+        due = []
+        while self._heap and self._heap[0][0] <= window:
+            due.append(heapq.heappop(self._heap)[2])
+        return due
+
+    def peek_next_window(self) -> Optional[int]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def snapshot(self) -> List[LinkEvent]:
+        """Pending events in pop order, without consuming them."""
+        return [ev for _, _, ev in sorted(self._heap)]
+
+    def copy(self) -> "EventLog":
+        return EventLog(self.snapshot())
+
+    def overrides(self, events: Iterable[LinkEvent]
+                  ) -> List[Tuple[Tuple[int, int], float]]:
+        """(endpoints, scale) pairs for a batch of events (last one wins)."""
+        merged = {}
+        for ev in events:
+            merged[(ev.src, ev.dst)] = ev.scale
+        return list(merged.items())

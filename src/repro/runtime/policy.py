@@ -1,0 +1,137 @@
+"""Replan triggers with hysteresis — the *decide* stage of the runtime loop.
+
+A replan costs planner time, a plan-cache probe, and (amortized) jit solve
+latency, so the policy's job is asymmetric: fire promptly when the active
+plan has genuinely degraded, and **never** fire on balanced traffic — the
+paper's "matches baseline under balanced traffic" claim is a statement
+about this trigger, not about the planner.
+
+The congestion signal is *self-calibrated*: every plan records its own
+``baseline_ratio`` — predicted max normalized load Z over the cut lower
+bound Z* — at solve time (even a perfect plan sits somewhat above the
+bound, and how far depends on topology and skew).  The trigger compares
+the current ratio against ``baseline_ratio * degrade_factor`` rather than
+an absolute constant, so a plan is replaced when *it* got worse, not when
+the workload is intrinsically hard.
+
+Hysteresis has three guards:
+
+  * **patience** — the threshold must be breached ``patience`` consecutive
+    windows (raise above 1 when the demand estimator is noisier than the
+    default EWMA, at the cost of one extra stale window per drift);
+  * **arming** — after a trigger the policy disarms until the ratio falls
+    back under ``baseline_ratio * rearm_factor`` (no re-fire storms while
+    a replan is being absorbed);
+  * **cooldown** — a minimum number of windows between triggers.
+
+Two triggers bypass the congestion hysteresis: a **staleness deadline**
+(optional: plans older than ``max_staleness`` windows replan regardless,
+for deployments whose drift is slow but unbounded) and **topology events**
+(link down/degraded — always replan, immediately).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    degrade_factor: float = 1.15  # trigger: ratio > baseline * degrade_factor
+    rearm_factor: float = 1.05    # re-arm: ratio < baseline * rearm_factor
+    patience: int = 1             # consecutive breaching windows to fire
+    cooldown_windows: int = 2     # min windows between congestion triggers
+    max_staleness: Optional[int] = None  # windows; None = no deadline
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanDecision:
+    replan: bool
+    reason: str        # "topology" | "congestion" | "staleness" | "none"
+    ratio: float
+    threshold: float
+
+
+class ReplanPolicy:
+    """Stateful trigger evaluation; one instance per runtime."""
+
+    def __init__(self, cfg: PolicyConfig | None = None):
+        self.cfg = cfg or PolicyConfig()
+        self._breach = 0
+        self._armed = True
+        self._last_trigger: Optional[int] = None
+
+    def decide(
+        self,
+        *,
+        window: int,
+        ratio: float,
+        baseline_ratio: float,
+        plan_age: int,
+        pending: bool,
+        topology_event: bool = False,
+    ) -> ReplanDecision:
+        """Evaluate the triggers for one window.
+
+        ``ratio`` is the active plan's predicted-congestion ratio on the
+        estimator's next-window demand; ``baseline_ratio`` its ratio at
+        solve time; ``plan_age`` windows since the active plan was solved;
+        ``pending`` whether a replan is already in flight (congestion and
+        staleness stand down; topology events do not — the controller
+        discards the in-flight plan, which was solved for dead geometry).
+        """
+        cfg = self.cfg
+        threshold = baseline_ratio * cfg.degrade_factor
+        if topology_event:
+            self._fired(window)
+            return ReplanDecision(True, "topology", ratio, threshold)
+        if pending:
+            return ReplanDecision(False, "none", ratio, threshold)
+        if cfg.max_staleness is not None and plan_age >= cfg.max_staleness:
+            self._fired(window)
+            return ReplanDecision(True, "staleness", ratio, threshold)
+
+        # congestion trigger with hysteresis
+        if not self._armed and ratio < baseline_ratio * cfg.rearm_factor:
+            self._armed = True
+            self._breach = 0
+        if self._armed and ratio > threshold:
+            self._breach += 1
+        else:
+            self._breach = 0
+        cooled = (
+            self._last_trigger is None
+            or window - self._last_trigger >= cfg.cooldown_windows
+        )
+        if self._armed and self._breach >= cfg.patience and cooled:
+            self._fired(window)
+            return ReplanDecision(True, "congestion", ratio, threshold)
+        return ReplanDecision(False, "none", ratio, threshold)
+
+    def _fired(self, window: int) -> None:
+        self._armed = False
+        self._breach = 0
+        self._last_trigger = window
+
+    def notify_swap(self) -> None:
+        """Re-arm when a new plan becomes active.
+
+        Disarming exists to stop re-fire storms *while the triggering
+        plan is still active*; once the swap lands, the new plan is judged
+        against its own baseline from a clean state.  Without this, a plan
+        solved on transitional (mid-drift) demand whose ratio never falls
+        below the re-arm watermark would pin the policy disarmed forever.
+        """
+        self._armed = True
+        self._breach = 0
+
+
+class NeverReplan(ReplanPolicy):
+    """Static one-shot baseline: plan once, never again (topology included)."""
+
+    def decide(self, *, window, ratio, baseline_ratio, plan_age, pending,
+               topology_event=False) -> ReplanDecision:
+        return ReplanDecision(
+            False, "none", ratio, baseline_ratio * self.cfg.degrade_factor
+        )

@@ -4,8 +4,14 @@ import numpy as np
 import pytest
 
 from repro.core.cost import CostModel
-from repro.core.fabsim import simulate, simulate_nccl_rounds
-from repro.core.mcf import solve_direct, solve_mwu
+from repro.core.fabsim import (
+    _pipeline_fill,
+    _pipeline_fill_reference,
+    pair_bandwidth,
+    simulate,
+    simulate_nccl_rounds,
+)
+from repro.core.mcf import solve_direct, solve_mwu, solve_static_striping
 from repro.core.topology import Topology
 
 MB = 1 << 20
@@ -72,3 +78,84 @@ def test_bottleneck_attribution():
     res = simulate(solve_direct(t, _skewed(0.9), cm))
     kind = res.bottleneck_kind(solve_direct(t, _skewed(0.9), cm))
     assert "link" in kind or "inject" in kind
+
+
+def test_bottleneck_kind_all_resource_classes():
+    """bottleneck_kind decodes each resource-id range correctly."""
+    cm = CostModel()
+    t = Topology(4, 4)
+    plan = solve_mwu(t, {(0, 1): 256 * MB}, cm, eps=1 * MB)
+    res = simulate(plan)
+    E, n = t.n_links, t.n_devices
+    import dataclasses
+    link_res = dataclasses.replace(res, bottleneck_resource=t.link_id(0, 1))
+    assert link_res.bottleneck_kind(plan) == "link[0->1]"
+    relay_res = dataclasses.replace(res, bottleneck_resource=E + 2)
+    assert relay_res.bottleneck_kind(plan) == "relay[2]"
+    inject_res = dataclasses.replace(res, bottleneck_resource=E + n + 3)
+    assert inject_res.bottleneck_kind(plan) == "inject[3]"
+
+
+def test_pipeline_fill_vectorized_bit_identical():
+    """The incidence-table fill must equal the per-flow reference exactly,
+    across solvers (relayed and direct paths) and chunk sizes."""
+    cm = CostModel()
+    cases = [
+        (Topology(8, 4), _skewed(0.7)),
+        (Topology(8, 4), {(0, 4): 256 * MB, (1, 5): 300 * MB}),
+        (Topology(4, 4), {(0, 1): 256 * MB}),
+        (Topology(8, 4), {(0, 4): 0.25 * MB}),   # below split threshold
+    ]
+    for topo, dem in cases:
+        for solver in (solve_mwu, solve_direct, solve_static_striping):
+            plan = solver(topo, dem, cm)
+            for chunk in (0.5 * MB, float(1 * MB), 4.0 * MB):
+                np.testing.assert_array_equal(
+                    _pipeline_fill(plan, chunk),
+                    _pipeline_fill_reference(plan, chunk),
+                )
+
+
+def test_pair_bandwidth():
+    cm = CostModel()
+    t = Topology(8, group_size=4)
+    dem = {(0, 4): 256 * MB, (1, 5): 256 * MB}
+    plan = solve_mwu(t, dem, cm, eps=1 * MB)
+    bw = pair_bandwidth(plan, (0, 4))
+    assert bw > 0
+    # a pair cannot beat its own injection cap, nor the fabric's total
+    assert bw <= cm.inject_cap * 1.01
+    # absent pair reports zero
+    assert pair_bandwidth(plan, (2, 6)) == 0.0
+    # single-rail direct baseline: pair bandwidth == the rail speed
+    direct = solve_direct(t, {(0, 4): 256 * MB}, cm)
+    assert pair_bandwidth(direct, (0, 4)) / 1e9 == pytest.approx(
+        45.1, rel=0.01
+    )
+
+
+def test_simulate_nccl_rounds_monotone_under_skew():
+    """Round-serialized NCCL completion must not improve as skew grows."""
+    cm = CostModel()
+    t = Topology(8, group_size=4)
+    times = [
+        simulate_nccl_rounds(t, _skewed(hot) if hot else {
+            (s, d): 64 * MB / 7 for s in range(8) for d in range(8) if s != d
+        }, cm)
+        for hot in (0.0, 0.3, 0.5, 0.7, 0.9)
+    ]
+    for a, b in zip(times, times[1:]):
+        assert b >= a * 0.999, f"NCCL time improved under added skew: {times}"
+
+
+def test_simresult_to_json_schema():
+    cm = CostModel()
+    t = Topology(8, group_size=4)
+    res = simulate(solve_mwu(t, _skewed(0.5), cm, eps=1 * MB))
+    obj = res.to_json_obj()
+    assert obj["schema"] == "nimble.simresult/v1"
+    assert obj["completion_time_s"] == pytest.approx(res.completion_time)
+    assert len(obj["per_resource_util"]) == len(res.per_resource_util)
+    from repro.jsonio import json_loads
+    round_trip = json_loads(res.to_json())
+    assert round_trip == obj

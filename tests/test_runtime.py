@@ -1,0 +1,356 @@
+"""Orchestration runtime: acceptance scenarios + component contracts.
+
+Acceptance (ISSUE 2):
+  * drifting-skew trace: adaptive beats the static one-shot plan by
+    >= 1.3x simulated completion while replanning <= 25% of windows;
+  * balanced trace: within 2% of static, zero replans after warmup;
+  * link-down event: converges to a valid replacement plan with all
+    demand served off the dead link.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.mcf import apply_plan_fractions, plan_from_flows, solve_mwu
+from repro.core.topology import DOWN_CAP, Topology
+from repro.runtime import (
+    DemandEstimator,
+    EstimatorConfig,
+    EventLog,
+    LinkTelemetry,
+    NeverReplan,
+    OrchestrationRuntime,
+    PolicyConfig,
+    ReplanPolicy,
+    balanced_trace,
+    demand_dict,
+    drifting_skew_trace,
+    link_down,
+    run_oracle,
+    run_static,
+    skew_burst_trace,
+)
+
+MB = 1 << 20
+N = 8
+G = 4
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return Topology(N, group_size=G)
+
+
+# -- acceptance: drifting skew ---------------------------------------------------
+
+def test_adaptive_beats_static_on_drift(topo):
+    trace = drifting_skew_trace(N, 48, dwell=12)
+    static = run_static(topo, trace)
+    rt = OrchestrationRuntime(topo)
+    adaptive = rt.run_trace(trace)
+
+    speedup = static.total_completion_s / adaptive.total_completion_s
+    assert speedup >= 1.3, f"adaptive only {speedup:.2f}x vs static"
+    assert adaptive.replan_fraction <= 0.25, (
+        f"replanned {adaptive.replan_fraction:.0%} of windows"
+    )
+    # every window served its full payload
+    for w, rep in enumerate(adaptive.reports):
+        assert rep.payload_bytes == pytest.approx(trace[w].sum(), rel=1e-6)
+
+
+def test_oracle_bounds_adaptive(topo):
+    trace = drifting_skew_trace(N, 36, dwell=12)
+    oracle = run_oracle(topo, trace)
+    rt = OrchestrationRuntime(topo)
+    adaptive = rt.run_trace(trace)
+    # clairvoyant per-window replan is a lower bound on completion time
+    assert oracle.total_completion_s <= adaptive.total_completion_s * 1.01
+
+
+# -- acceptance: balanced parity -------------------------------------------------
+
+def test_balanced_matches_static_zero_replans(topo):
+    warmup = 2
+    trace = balanced_trace(N, 30)
+    static = run_static(topo, trace)
+    rt = OrchestrationRuntime(topo)
+    adaptive = rt.run_trace(trace)
+
+    ratio = adaptive.total_completion_s / static.total_completion_s
+    assert ratio <= 1.02, f"adaptive {ratio:.4f}x static on balanced traffic"
+    assert all(w < warmup for w in adaptive.replan_windows), (
+        f"replans after warmup: {adaptive.replan_windows}"
+    )
+
+
+# -- acceptance: link-down fault tolerance ---------------------------------------
+
+def test_link_down_converges_all_demand_served(topo):
+    fail_at = 8
+    trace = balanced_trace(N, 24)
+    events = EventLog([link_down(fail_at, 0, G)])
+    rt = OrchestrationRuntime(topo, events=events)
+    res = rt.run_trace(trace)
+
+    # the fault window itself pays a catastrophic completion, then the
+    # forced replan lands at the next boundary
+    assert res.reports[fail_at].replan_reason == "topology"
+    assert res.reports[fail_at + 1].swapped
+
+    lid = rt.topo.link_id(0, G)
+    assert rt.topo.capacity[lid] <= DOWN_CAP
+    # converged plan: all demand served, nothing on the dead link
+    final_dem = demand_dict(trace[-1])
+    final = apply_plan_fractions(
+        rt.active_plan, final_dem, topo=rt.topo
+    )
+    assert final.link_bytes[lid] == 0.0
+    routed = sum(final.per_pair_bytes().values())
+    assert routed == pytest.approx(sum(final_dem.values()), rel=1e-9)
+    # post-recovery windows are sane (degraded fabric, so allow 2x)
+    pre = np.median([r.completion_s for r in res.reports[:fail_at]])
+    assert res.reports[-1].completion_s <= 2.0 * pre
+
+
+def test_event_log_same_window_schedule_order():
+    """Same-window events pop in schedule order, so the last *scheduled*
+    wins in overrides (not whichever scale happens to sort last)."""
+    from repro.runtime import link_restored
+    log = EventLog()
+    log.schedule(link_restored(5, 0, G))
+    log.schedule(link_down(5, 0, G))
+    due = log.pop_due(5)
+    assert [ev.scale for ev in due] == [1.0, 0.0]
+    assert dict(EventLog().overrides(due)) == {(0, G): 0.0}
+
+
+def test_event_log_not_consumed_by_replays(topo):
+    """One EventLog must parameterize several replays (adaptive vs static)."""
+    trace = balanced_trace(N, 12)
+    events = EventLog([link_down(4, 0, G)])
+    rt = OrchestrationRuntime(topo, events=EventLog())
+    rt.run_trace(trace, events=events)
+    assert len(events) == 1, "run_trace drained the caller's event log"
+    static = run_static(topo, trace, events=events)
+    assert len(events) == 1, "run_static drained the caller's event log"
+    assert any(r.events for r in static.reports), (
+        "static replay did not see the fault"
+    )
+
+
+def test_degraded_topology_rebuilds_tables(topo):
+    rt = OrchestrationRuntime(topo)
+    tables_before = rt.tables
+    rt.events.schedule(link_down(0, 0, G))
+    rt.step(balanced_trace(N, 1)[0])
+    assert rt.tables is not tables_before
+    assert rt.topo.fingerprint != topo.fingerprint
+    assert rt.stats.events == 1
+
+
+# -- component: double-buffered swap ---------------------------------------------
+
+def test_swap_is_deferred_to_boundary(topo):
+    """A replan issued at window w must not change the plan serving w; the
+    swap lands at a later boundary (double-buffer contract), and plan
+    versions only ever change on a swapped window."""
+    trace = drifting_skew_trace(N, 20, dwell=6, ramp=1)
+    rt = OrchestrationRuntime(topo)
+    res = rt.run_trace(trace)
+    assert res.stats.swaps >= 1
+    for prev, cur in zip(res.reports, res.reports[1:]):
+        if cur.plan_version != prev.plan_version:
+            assert cur.swapped, (
+                f"plan changed at w{cur.window} without a swap boundary"
+            )
+            assert cur.plan_version > prev.plan_version
+        # a window that issued a replan still served its own (old) plan;
+        # the earliest the new plan can appear is the next report
+        if prev.replan_issued and cur.swapped:
+            assert cur.window == prev.window + 1
+
+
+def test_plan_cache_hit_on_returning_phase(topo):
+    trace = drifting_skew_trace(N, 60, dwell=10, hot_seq=[0, G], jitter=0.01)
+    rt = OrchestrationRuntime(topo)
+    rt.run_trace(trace)
+    info = rt.cache_info()
+    assert info["hits"] >= 1, f"no cache hits on A/B phases: {info}"
+    assert info["solves"] < rt.stats.replans + 1 + info["hits"]
+
+
+def test_prefill_cache_batch_solve(topo):
+    rt = OrchestrationRuntime(topo)
+    solves_before = rt.stats.solves
+    phases = [
+        drifting_skew_trace(N, 1, dwell=1, hot_seq=[h], jitter=0.0)[0]
+        for h in (0, 2, 5)
+    ]
+    fresh = rt.prefill_cache(phases)
+    assert fresh == 3
+    assert rt.stats.solves == solves_before + 3
+    # identical demands hit the cache now
+    assert rt.prefill_cache(phases) == 0
+
+
+# -- component: policy hysteresis ------------------------------------------------
+
+def test_policy_hysteresis_and_cooldown():
+    pol = ReplanPolicy(PolicyConfig(
+        degrade_factor=1.5, rearm_factor=1.1, patience=2,
+        cooldown_windows=3,
+    ))
+    kw = dict(baseline_ratio=1.0, plan_age=0, pending=False)
+    # one breaching window is not enough (patience=2)
+    assert not pol.decide(window=0, ratio=2.0, **kw).replan
+    d = pol.decide(window=1, ratio=2.0, **kw)
+    assert d.replan and d.reason == "congestion"
+    # disarmed after firing: no re-fire while ratio stays high
+    assert not pol.decide(window=2, ratio=2.0, **kw).replan
+    assert not pol.decide(window=3, ratio=2.0, **kw).replan
+    # re-arms below the watermark, then fires again after patience+cooldown
+    assert not pol.decide(window=4, ratio=1.0, **kw).replan
+    assert not pol.decide(window=5, ratio=2.0, **kw).replan
+    assert pol.decide(window=6, ratio=2.0, **kw).replan
+
+
+def test_policy_staleness_and_topology_triggers():
+    pol = ReplanPolicy(PolicyConfig(max_staleness=5))
+    base = dict(ratio=1.0, baseline_ratio=1.0, pending=False)
+    assert not pol.decide(window=0, plan_age=4, **base).replan
+    d = pol.decide(window=1, plan_age=5, **base)
+    assert d.replan and d.reason == "staleness"
+    # topology events fire even with a replan pending
+    d = pol.decide(
+        window=2, plan_age=0, ratio=1.0, baseline_ratio=1.0,
+        pending=True, topology_event=True,
+    )
+    assert d.replan and d.reason == "topology"
+    # congestion and staleness stand down while a replan is pending
+    assert not pol.decide(
+        window=3, plan_age=99, ratio=99.0, baseline_ratio=1.0, pending=True
+    ).replan
+
+
+def test_never_replan_policy(topo):
+    trace = drifting_skew_trace(N, 20, dwell=5)
+    rt = OrchestrationRuntime(topo, policy=NeverReplan())
+    res = rt.run_trace(trace)
+    assert res.replan_windows == []
+    assert res.stats.swaps == 0
+
+
+# -- component: estimator --------------------------------------------------------
+
+def test_estimator_ewma_converges():
+    est = DemandEstimator(4, EstimatorConfig(alpha=0.5))
+    D = np.full((4, 4), 10.0 * MB)
+    np.fill_diagonal(D, 0.0)
+    for _ in range(12):
+        est.update(D)
+    np.testing.assert_allclose(est.predict(), D, rtol=1e-3)
+
+
+def test_estimator_burst_fast_attack():
+    est = DemandEstimator(4, EstimatorConfig(alpha=0.25, burst_ratio=2.0))
+    base = np.full((4, 4), 8.0 * MB)
+    np.fill_diagonal(base, 0.0)
+    for _ in range(5):
+        est.update(base)
+    burst = base.copy()
+    burst[0, 1] = 200.0 * MB
+    est.update(burst)
+    pred = est.predict()
+    # bursting entry snaps to the observation, not the slow EWMA
+    assert pred[0, 1] == pytest.approx(200.0 * MB)
+    assert est.burst_pairs()[0, 1]
+    # non-bursting entries stay smoothed
+    assert pred[1, 2] == pytest.approx(8.0 * MB, rel=1e-3)
+
+
+def test_runtime_reacts_to_skew_burst(topo):
+    trace = skew_burst_trace(N, 16, burst_window=5)
+    rt = OrchestrationRuntime(topo)
+    res = rt.run_trace(trace)
+    post = [w for w in res.replan_windows if w >= 5]
+    assert post and post[0] <= 7, (
+        f"burst at w5 not answered promptly: {res.replan_windows}"
+    )
+
+
+# -- component: telemetry ring buffer --------------------------------------------
+
+def test_telemetry_ring_wraps_and_aggregates():
+    caps = np.array([100.0, 200.0, 400.0])
+    tel = LinkTelemetry(caps, window_capacity=4)
+    for w in range(6):
+        tel.record_loads(w, np.array([100.0, 100.0, 0.0]) * (w + 1))
+    assert len(tel) == 4
+    wins = tel.latest(4)
+    assert [w.window for w in wins] == [2, 3, 4, 5]   # oldest evicted
+    last = wins[-1]
+    assert last.completion_s == pytest.approx(6.0)    # 600/100
+    assert last.per_resource_util[0] == pytest.approx(1.0)
+    assert tel.utilization_imbalance() > 1.0
+    agg = tel.aggregate()
+    assert agg["schema"].startswith("nimble.telemetry_aggregate")
+    assert agg["windows"] == 4
+    obs = tel.observed_demand()
+    assert obs is None  # no pair_bytes recorded
+
+
+def test_trace_result_serializes(topo):
+    trace = balanced_trace(N, 4)
+    rt = OrchestrationRuntime(topo)
+    res = rt.run_trace(trace)
+    obj = res.to_json_obj()
+    assert obj["schema"].startswith("nimble.runtime_trace")
+    assert len(obj["windows"]) == 4
+    assert obj["stats"]["schema"].startswith("nimble.runtime_stats")
+    from repro.jsonio import json_dumps, json_loads
+    assert json_loads(json_dumps(obj))["replan_fraction"] == pytest.approx(
+        res.replan_fraction
+    )
+
+
+# -- plan bridges ----------------------------------------------------------------
+
+def test_plan_from_flows_matches_host_quality(topo):
+    rng = np.random.default_rng(3)
+    D = (rng.integers(1, 64, (N, N)) * MB).astype(np.float64)
+    np.fill_diagonal(D, 0.0)
+    dem = demand_dict(D)
+    host = solve_mwu(topo, dem, eps=1 * MB)
+    from repro.runtime import solve_plans_batch
+    jit_plan = solve_plans_batch(topo, D[None])[0]
+    routed = sum(jit_plan.per_pair_bytes().values())
+    assert routed == pytest.approx(D.sum(), rel=1e-9)
+    # equivalent quality (same contract as the planner-parity suite)
+    assert jit_plan.max_normalized_load() <= host.max_normalized_load() * 1.25
+
+
+def test_apply_plan_fractions_identity(topo):
+    """Applying a plan's own demand reproduces its load profile."""
+    rng = np.random.default_rng(4)
+    D = (rng.integers(8, 64, (N, N)) * MB).astype(np.float64)
+    np.fill_diagonal(D, 0.0)
+    dem = demand_dict(D)
+    plan = solve_mwu(topo, dem, eps=1 * MB)
+    re = apply_plan_fractions(plan, dem)
+    np.testing.assert_allclose(
+        re.resource_bytes, plan.resource_bytes, rtol=1e-6
+    )
+
+
+def test_apply_plan_fractions_unseen_pair_uses_pxn(topo):
+    """Pairs the stale plan never routed fall back to the static PXN rule."""
+    from repro.core.mcf import pxn_path
+    seen = {(0, 1): 32.0 * MB}
+    plan = solve_mwu(topo, seen, eps=1 * MB)
+    drifted = {(0, 1): 16.0 * MB, (2, G + 3): 64.0 * MB}  # second pair unseen
+    out = apply_plan_fractions(plan, drifted)
+    assert sum(out.per_pair_bytes().values()) == pytest.approx(80.0 * MB)
+    fl = out.flows[(2, G + 3)]
+    assert len(fl) == 1
+    assert fl[0].path == pxn_path(topo, (2, G + 3))
