@@ -1,0 +1,261 @@
+"""Fabric-arbiter fairness: arbitrated co-planning vs independent replanning.
+
+Four sections over a 2-group/8-device fabric (DESIGN.md §4):
+
+  * **host_coplan** — the acceptance scenario: a skewed All-to-Allv tenant
+    sharing the fabric with a pinned (direct-routed) elephant background.
+    Independent planning is load-oblivious and stacks the skew tenant onto
+    the elephant rails; arbitrated planning prices the committed background
+    into the solve.  Reports combined fabric drain for both, plus Jain's
+    index over per-tenant drain times.
+  * **weights_sweep** — the same contention with the skew tenant's weight
+    swept: weight scales exported prices by ``1/w``, so a heavier tenant
+    discounts peers' load, claims contested rails back, and trades combined
+    drain for its own — the weighted-share dial, made visible.
+  * **runtime_adaptive** — an :class:`~repro.runtime.OrchestrationRuntime`
+    tenant registered with the arbiter, replanning a drifting-skew trace
+    against the committed background: the execution-time view (prices enter
+    the jitted batch solve, replans pass the admission gate).
+  * **four_tenant** — two skewed MWU tenants (different hotspots) plus two
+    pinned elephants on disjoint rails, arbitrated to equilibrium.
+
+Metrics land in ``BENCH_fairness.json`` (tagged ``nimble.bench_fairness/v1``)
+with Jain's index and per-tenant drain times per section.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.mcf import solve_direct, solve_mwu
+from repro.core.topology import Topology
+from repro.fabric import FabricArbiter, TenantConfig, jains_index
+from repro.runtime import OrchestrationRuntime, drifting_skew_trace
+
+from .common import emit
+
+MB = float(1 << 20)
+N = 8
+GROUP = 4
+
+
+def _skew_demand(bytes_per_src: float = 64 * MB, hot: int = 0,
+                 hot_frac: float = 0.7) -> dict:
+    """Skewed All-to-Allv: ``hot_frac`` of every source's bytes to ``hot``."""
+    D = {}
+    for s in range(N):
+        for d in range(N):
+            if s != d:
+                D[(s, d)] = bytes_per_src * (
+                    hot_frac if d == hot else (1.0 - hot_frac) / (N - 2)
+                )
+    return D
+
+
+def _elephant_demand(mb: float, rails=(0, 1)) -> dict:
+    """Bidirectional elephants pinned rail-matched across the groups."""
+    D = {}
+    for r in rails:
+        D[(r, r + GROUP)] = mb * MB
+        D[(r + GROUP, r)] = mb * MB
+    return D
+
+
+def _stacked_drain(rm, *loads) -> float:
+    total = np.zeros_like(rm.capacity)
+    for l in loads:
+        total = total + l
+    return float(np.max(total / rm.capacity))
+
+
+def host_coplan(bg_mb: float = 128.0) -> dict:
+    """Acceptance: arbitrated beats independent on combined drain, Jain >= 0.9."""
+    cm = CostModel()
+    topo = Topology(N, group_size=GROUP)
+    D = _skew_demand()
+    bg = solve_direct(topo, _elephant_demand(bg_mb), cm)
+
+    # independent: the skew tenant plans as if the fabric were empty
+    ind = solve_mwu(topo, D, cm)
+    ind_combined = _stacked_drain(ind.rm, ind.resource_bytes, bg.resource_bytes)
+
+    arb = FabricArbiter(topo, cm)
+    arb.register("skew")
+    arb.register("bg")
+    arb.commit("bg", bg.resource_bytes)
+    plan = solve_mwu(topo, D, cm, ext_loads=arb.prices_for("skew"))
+    arb.commit("skew", plan.resource_bytes)
+    arb_combined = arb.combined_drain_s()
+    fairness = arb.fairness_report()
+
+    win = ind_combined / arb_combined
+    emit(
+        f"fairness/host_coplan/bg{bg_mb:g}MB",
+        arb_combined * 1e6,
+        f"independent={ind_combined * 1e3:.2f}ms "
+        f"arbitrated={arb_combined * 1e3:.2f}ms win={win:.2f}x "
+        f"jain={fairness['jain_index']:.3f} (targets: win>1, jain>=0.9)",
+    )
+    return {
+        "bg_mb": bg_mb,
+        "independent_combined_drain_s": ind_combined,
+        "arbitrated_combined_drain_s": arb_combined,
+        "win": win,
+        "jain_index": fairness["jain_index"],
+        "maxmin_violation": fairness["maxmin_violation"],
+        "drain_s": fairness["drain_s"],
+    }
+
+
+def weights_sweep(bg_mb: float = 128.0, weights=(0.5, 1.0, 2.0, 4.0)) -> dict:
+    """Sweep the skew tenant's weight against a fixed elephant background."""
+    cm = CostModel()
+    topo = Topology(N, group_size=GROUP)
+    D = _skew_demand()
+    bg = solve_direct(topo, _elephant_demand(bg_mb), cm)
+
+    points = []
+    for w in weights:
+        arb = FabricArbiter(topo, cm)
+        arb.register("skew", TenantConfig(weight=w))
+        arb.register("bg")
+        arb.commit("bg", bg.resource_bytes)
+        plan = solve_mwu(topo, D, cm, ext_loads=arb.prices_for("skew"))
+        arb.commit("skew", plan.resource_bytes)
+        fairness = arb.fairness_report()
+        points.append(
+            {
+                "weight": w,
+                "skew_drain_s": fairness["drain_s"]["skew"],
+                "combined_drain_s": fairness["combined_drain_s"],
+                "jain_index": fairness["jain_index"],
+            }
+        )
+    emit(
+        f"fairness/weights_sweep/bg{bg_mb:g}MB",
+        0.0,
+        " ".join(
+            f"w={p['weight']:g}:own={p['skew_drain_s'] * 1e3:.2f}ms"
+            f"/comb={p['combined_drain_s'] * 1e3:.2f}ms"
+            for p in points
+        ),
+    )
+    return {"bg_mb": bg_mb, "points": points}
+
+
+def runtime_adaptive(bg_mb: float = 192.0, windows: int = 32) -> dict:
+    """Execution-time view: an arbitrated runtime vs an oblivious one."""
+    topo = Topology(N, group_size=GROUP)
+    trace = drifting_skew_trace(N, windows, dwell=8)
+    bg = solve_direct(topo, _elephant_demand(bg_mb))
+    bg_time = bg.resource_bytes / bg.rm.capacity
+
+    def replay(arbitrated: bool):
+        rt = OrchestrationRuntime(topo)
+        arb = None
+        if arbitrated:
+            arb = FabricArbiter(topo)
+            arb.register_runtime("skew", rt)
+            arb.register("bg")
+            arb.commit("bg", bg.resource_bytes)
+        combined = own = 0.0
+        for w in range(windows):
+            rt.step(trace[w])
+            t = rt.telemetry.latest(1)[0].per_resource_time
+            combined += float(np.max(t + bg_time))
+            own += float(t.max())
+        return combined, own, rt, arb
+
+    ind_combined, ind_own, _, _ = replay(False)
+    arb_combined, arb_own, rt, arb = replay(True)
+    win = ind_combined / arb_combined
+    bg_total = float(bg_time.max()) * windows
+    jain = jains_index([arb_own, bg_total])
+    emit(
+        f"fairness/runtime/W{windows}",
+        arb_combined * 1e6,
+        f"independent={ind_combined * 1e3:.1f}ms "
+        f"arbitrated={arb_combined * 1e3:.1f}ms win={win:.2f}x "
+        f"replans={rt.stats.replans} gated={arb.stats.throttled} "
+        f"jain={jain:.3f}",
+    )
+    return {
+        "windows": windows,
+        "bg_mb": bg_mb,
+        "independent_combined_drain_s": ind_combined,
+        "arbitrated_combined_drain_s": arb_combined,
+        "win": win,
+        "replans": rt.stats.replans,
+        "throttled": arb.stats.throttled,
+        "jain_index": jain,
+        "drain_s": {"skew": arb_own, "bg": bg_total},
+    }
+
+
+def four_tenant(bg_mb: float = 96.0) -> dict:
+    """2 arbitrated skew tenants + 2 pinned elephants on disjoint rails."""
+    cm = CostModel()
+    topo = Topology(N, group_size=GROUP)
+    demands = {
+        "skew0": _skew_demand(48 * MB, hot=0),
+        "skew4": _skew_demand(48 * MB, hot=4),
+    }
+    pinned = {
+        "ele01": solve_direct(topo, _elephant_demand(bg_mb, rails=(0, 1)), cm),
+        "ele23": solve_direct(topo, _elephant_demand(bg_mb, rails=(2, 3)), cm),
+    }
+
+    # independent: every tenant oblivious of every other
+    ind_loads = [solve_mwu(topo, D, cm).resource_bytes for D in demands.values()]
+    ind_loads += [p.resource_bytes for p in pinned.values()]
+    rm = pinned["ele01"].rm
+    ind_combined = _stacked_drain(rm, *ind_loads)
+
+    arb = FabricArbiter(topo, cm)
+    for name in list(demands) + list(pinned):
+        arb.register(name)
+    for name, plan in pinned.items():
+        arb.commit(name, plan.resource_bytes)
+    arb.arbitrate(demands)
+    arb_combined = arb.combined_drain_s()
+    fairness = arb.fairness_report()
+    win = ind_combined / arb_combined
+    emit(
+        "fairness/four_tenant",
+        arb_combined * 1e6,
+        f"independent={ind_combined * 1e3:.2f}ms "
+        f"arbitrated={arb_combined * 1e3:.2f}ms win={win:.2f}x "
+        f"jain={fairness['jain_index']:.3f} solves={arb.stats.solves}",
+    )
+    return {
+        "independent_combined_drain_s": ind_combined,
+        "arbitrated_combined_drain_s": arb_combined,
+        "win": win,
+        "jain_index": fairness["jain_index"],
+        "drain_s": fairness["drain_s"],
+        "solves": arb.stats.solves,
+    }
+
+
+def metrics() -> dict:
+    return {
+        "host_coplan": host_coplan(),
+        "weights_sweep": weights_sweep(),
+        "runtime_adaptive": runtime_adaptive(),
+        "four_tenant": four_tenant(),
+    }
+
+
+def run() -> dict:
+    return metrics()
+
+
+def smoke() -> dict:
+    """CI variant — host solves at n=8 plus one 32-window runtime replay
+    already land in a few seconds."""
+    return metrics()
+
+
+if __name__ == "__main__":
+    run()

@@ -3,10 +3,19 @@
 The paper argues NIMBLE complements the fabric's congestion-control layer:
 by re-slicing a job's traffic over live link costs it avoids per-job
 hotspotting even when *other tenants* load part of the fabric.  We model a
-background tenant as elephant flows pinned (direct-routed) onto a subset of
-rails, feed the live per-resource load into NIMBLE's planner (the
-``prev_loads`` hysteresis input), and compare the combined fabric drain
-time against load-oblivious direct routing and static striping.
+background tenant as elephant flows pinned (direct-routed) onto a subset
+of rails, commit its load to the :class:`~repro.fabric.FabricArbiter`
+ledger, and solve our job with the arbiter's exported prices
+(``ext_loads`` — priced during the solve, excluded from the plan's own
+accounting).  Combined fabric drain time is compared against
+load-oblivious direct routing and static striping.
+
+Historical note: before the arbiter this bench injected the background
+load as ``prev_loads=2.0 * bg_bytes`` — the factor 2 *undoing* the
+planner's own-load EMA (``CostModel.hysteresis = 0.5``, the single place
+that factor is defined) — and then subtracted the EMA-carried bytes back
+out of the plan's accounting.  ``ext_loads`` replaces both halves of that
+hack: external load is never EMA-folded and never accounted.
 """
 
 from __future__ import annotations
@@ -20,6 +29,7 @@ from repro.core.mcf import solve_direct, solve_mwu, solve_static_striping
 from repro.core.planner import PlannerConfig, plan_flows, plan_flows_batch
 from repro.core.schedule import build_planner_tables
 from repro.core.topology import Topology
+from repro.fabric import FabricArbiter
 
 from .common import emit, time_fn
 
@@ -52,20 +62,25 @@ def run() -> None:
         bg = solve_direct(topo, bg_D, cm) if bg_mb else None
         bg_bytes = bg.resource_bytes if bg else 0.0
 
+        arbiter = FabricArbiter(topo, cm)
+        arbiter.register("job")
+        if bg_mb:
+            arbiter.register("bg")
+            arbiter.commit("bg", bg.resource_bytes)
         plans = {
-            # NIMBLE sees live load via prev_loads (x2 undoes the 0.5 EMA)
-            "nimble": solve_mwu(topo, D, cm, prev_loads=2.0 * bg_bytes)
-            if bg_mb else solve_mwu(topo, D, cm),
+            # NIMBLE sees live load via the arbiter's exported prices
+            # (None when the fabric is otherwise empty — identical solve)
+            "nimble": solve_mwu(
+                topo, D, cm, ext_loads=arbiter.prices_for("job")
+            ),
             "direct": solve_direct(topo, D, cm),
             "stripe": solve_static_striping(topo, D, cm),
         }
         times = {}
         for name, plan in plans.items():
-            own = plan.resource_bytes
-            if bg_mb and name == "nimble":
-                # remove the EMA-carried bg bytes so only job traffic counts
-                own = own - 0.5 * 2.0 * bg_bytes
-            times[name] = _drain(plan.rm, own, bg_bytes) * 1e3
+            # resource_bytes is own traffic only — ext prices are priced
+            # during the solve but never folded into the accounting
+            times[name] = _drain(plan.rm, plan.resource_bytes, bg_bytes) * 1e3
         emit(
             f"vE/bg{bg_mb}MB",
             times["nimble"] * 1e3,

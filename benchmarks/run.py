@@ -10,12 +10,14 @@ writes the aggregate to benchmarks/results.csv.
   Table I     bench_algo_overhead   planner overhead vs comm time
   §V-E        bench_multitenant     background-tenant interference
   §III/V      bench_runtime_adapt   execution-time adaptation vs static/oracle
+  (arbiter)   bench_fairness        multi-tenant arbitration + Jain fairness
   (extra)     bench_kernels         kernel micro-benches
 
-``--smoke`` runs the planner-overhead and runtime-adaptation sections in a
-few seconds and writes ``BENCH_algo_overhead.json`` /
-``BENCH_runtime_adapt.json`` at the repo root, so planner-latency and
-adaptation regressions show up in the bench trajectory on every PR.
+``--smoke`` runs the planner-overhead, runtime-adaptation, and fairness
+sections in a few seconds and writes ``BENCH_algo_overhead.json`` /
+``BENCH_runtime_adapt.json`` / ``BENCH_fairness.json`` at the repo root,
+so planner-latency, adaptation, and arbitration regressions show up in the
+bench trajectory on every PR.
 """
 
 from __future__ import annotations
@@ -40,7 +42,12 @@ def _write_metrics(fname: str, metrics: dict, kind: str | None = None) -> str:
 
 
 def smoke() -> None:
-    from . import bench_algo_overhead, bench_runtime_adapt, common
+    from . import (
+        bench_algo_overhead,
+        bench_fairness,
+        bench_runtime_adapt,
+        common,
+    )
 
     print("name,us_per_call,derived")
     print("# --- table1_overhead (smoke) ---")
@@ -53,13 +60,22 @@ def smoke() -> None:
         bench_runtime_adapt.smoke(),
         kind="bench_runtime_adapt",
     )
-    print(f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}")
+    print("# --- fairness (smoke) ---")
+    out3 = _write_metrics(
+        "BENCH_fairness.json",
+        bench_fairness.smoke(),
+        kind="bench_fairness",
+    )
+    print(
+        f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}, {out3}"
+    )
 
 
 def main() -> None:
     from . import (
         bench_algo_overhead,
         bench_alltoallv_skew,
+        bench_fairness,
         bench_kernels,
         bench_moe_e2e,
         bench_multitenant,
@@ -79,17 +95,20 @@ def main() -> None:
         ("table1_overhead", bench_algo_overhead),
         ("vE_multitenant", bench_multitenant),
         ("runtime_adapt", bench_runtime_adapt),
+        ("fairness", bench_fairness),
         ("kernels", bench_kernels),
     ]
+    metric_files = {
+        "runtime_adapt": ("BENCH_runtime_adapt.json", "bench_runtime_adapt"),
+        "fairness": ("BENCH_fairness.json", "bench_fairness"),
+    }
     print("name,us_per_call,derived")
     for name, mod in sections:
         print(f"# --- {name} ---")
         metrics = mod.run()
-        if name == "runtime_adapt" and metrics:
-            _write_metrics(
-                "BENCH_runtime_adapt.json", metrics,
-                kind="bench_runtime_adapt",
-            )
+        if name in metric_files and metrics:
+            fname, kind = metric_files[name]
+            _write_metrics(fname, metrics, kind=kind)
     out = os.path.join(os.path.dirname(__file__), "results.csv")
     with open(out, "w") as f:
         f.write("name,us_per_call,derived\n")

@@ -4,7 +4,8 @@
 
 Also appends the execution-time orchestration section when the repo root
 holds a ``BENCH_runtime_adapt.json`` (tagged ``nimble.bench_runtime_adapt``
-via the shared ``repro.jsonio`` schema).
+via the shared ``repro.jsonio`` schema), and the fabric-arbiter fairness
+section from ``BENCH_fairness.json`` (``nimble.bench_fairness``).
 """
 
 import glob
@@ -71,17 +72,8 @@ def multipod_status(recs):
 
 def runtime_adapt_section():
     """Orchestration-runtime adaptation table from BENCH_runtime_adapt.json."""
-    path = os.path.join(ROOT, "BENCH_runtime_adapt.json")
-    if not os.path.exists(path):
-        return
-    try:
-        from repro.jsonio import read_json_file, schema_kind
-        rec = read_json_file(path)
-        kind = schema_kind(rec)
-    except ImportError:  # no PYTHONPATH=src; same on-disk format
-        rec = json.load(open(path))
-        kind = rec.get("schema", "").split(".", 1)[-1].rsplit("/", 1)[0]
-    if kind != "bench_runtime_adapt":
+    rec = _load_tagged("BENCH_runtime_adapt.json", "bench_runtime_adapt")
+    if rec is None:
         return
     print("\n### Execution-time orchestration (drift / balance / fault)\n")
     d, b, l = rec["drift"], rec["balanced"], rec["linkdown"]
@@ -100,6 +92,51 @@ def runtime_adapt_section():
     print(
         f"| link down | {l['windows']} | fault@w{l['fail_window']}, "
         f"replacement plan in {l['recovery_windows']} window(s) |"
+    )
+
+
+def _load_tagged(fname, expect_kind):
+    path = os.path.join(ROOT, fname)
+    if not os.path.exists(path):
+        return None
+    try:
+        from repro.jsonio import read_json_file, schema_kind
+        rec = read_json_file(path)
+        kind = schema_kind(rec)
+    except ImportError:  # no PYTHONPATH=src; same on-disk format
+        rec = json.load(open(path))
+        kind = rec.get("schema", "").split(".", 1)[-1].rsplit("/", 1)[0]
+    return rec if kind == expect_kind else None
+
+
+def fairness_section():
+    """Fabric-arbiter fairness table from BENCH_fairness.json."""
+    rec = _load_tagged("BENCH_fairness.json", "bench_fairness")
+    if rec is None:
+        return
+    print("\n### Fabric arbiter (multi-tenant congestion pricing)\n")
+    h, r, f = rec["host_coplan"], rec["runtime_adaptive"], rec["four_tenant"]
+    print("| scenario | combined drain (independent -> arbitrated) "
+          "| win | Jain |")
+    print("|---|---|---|---|")
+    for name, s in (
+        ("skew vs elephant (host)", h),
+        (f"arbitrated runtime ({r['windows']}w)", r),
+        ("four tenants", f),
+    ):
+        print(
+            f"| {name} | {s['independent_combined_drain_s'] * 1e3:.2f}ms -> "
+            f"{s['arbitrated_combined_drain_s'] * 1e3:.2f}ms "
+            f"| {s['win']:.2f}x | {s['jain_index']:.3f} |"
+        )
+    pts = rec["weights_sweep"]["points"]
+    print(
+        "\nweight sweep (skew tenant): "
+        + ", ".join(
+            f"w={p['weight']:g}: own {p['skew_drain_s'] * 1e3:.2f}ms / "
+            f"combined {p['combined_drain_s'] * 1e3:.2f}ms"
+            for p in pts
+        )
     )
 
 
@@ -131,6 +168,7 @@ def main():
                   f"| {b / o:.2f}x |")
     multipod_status(mp)
     runtime_adapt_section()
+    fairness_section()
 
 
 if __name__ == "__main__":

@@ -47,7 +47,13 @@ class CostModel:
     # --- policy knobs (paper defaults) ---------------------------------------
     split_threshold: float = 1 << 20   # bytes; <=1 MB stays single-path
     hop_setup_bytes: float = 2.0e6     # pipeline fill/flush, equivalent bytes
-    hysteresis: float = 0.5            # EMA weight on previous loads (0 = off)
+    # EMA weight on this job's OWN previous loads (0 = off).  This is the
+    # single definition of the hysteresis factor: `prev_loads` inputs are
+    # folded as `hysteresis * prev + (1 - hysteresis) * now`.  External
+    # (other-tenant) load must enter through the solvers' `ext_loads`
+    # instead — priced raw, never EMA-folded, never accounted (the fabric
+    # arbiter's export; DESIGN.md §4).
+    hysteresis: float = 0.5
     # --- hardware calibration (fit to the paper's Fig. 6) --------------------
     relay_cap: float = 93.1e9          # per-device forwarding throughput
     inject_cap: float = 278.2e9        # per-device egress aggregate

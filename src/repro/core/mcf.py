@@ -108,6 +108,7 @@ def solve_mwu(
     lam: float = 0.25,
     eps: float = 1 << 20,
     prev_loads: np.ndarray | None = None,
+    ext_loads: np.ndarray | None = None,
     max_iters: int = 10_000,
     refresh: str = "sweep",
 ) -> Plan:
@@ -117,16 +118,29 @@ def solve_mwu(
     is the vectorized incidence-matrix solver with one refresh per sweep
     over all live pairs; ``"sequential"`` is the legacy per-assignment
     refresh kept for fidelity cross-checks.
+
+    ``prev_loads`` and ``ext_loads`` both raise resource prices before the
+    first assignment, but with different contracts:
+
+      * ``prev_loads`` is *this* job's previous loads — folded through the
+        EMA (``CostModel.hysteresis``) and carried into the returned plan's
+        ``resource_bytes`` (oscillation damping across replans);
+      * ``ext_loads`` is *other tenants'* committed load (effective bytes
+        per resource, e.g. :meth:`repro.fabric.FabricArbiter.prices_for`) —
+        priced as-is, never EMA-smoothed, and **excluded** from the
+        returned plan's accounting, so ``resource_bytes`` stays this
+        tenant's own traffic.  ``ext_loads=None`` and all-zero
+        ``ext_loads`` produce bit-identical plans.
     """
     if refresh == "sweep":
         return _solve_mwu_sweep(
             topo, demands, cost_model, lam=lam, eps=eps,
-            prev_loads=prev_loads, max_iters=max_iters,
+            prev_loads=prev_loads, ext_loads=ext_loads, max_iters=max_iters,
         )
     if refresh == "sequential":
         return _solve_mwu_sequential(
             topo, demands, cost_model, lam=lam, eps=eps,
-            prev_loads=prev_loads, max_iters=max_iters,
+            prev_loads=prev_loads, ext_loads=ext_loads, max_iters=max_iters,
         )
     raise ValueError(f"unknown refresh discipline {refresh!r}")
 
@@ -145,6 +159,7 @@ def _solve_mwu_sweep(
     lam: float = 0.25,
     eps: float = 1 << 20,
     prev_loads: np.ndarray | None = None,
+    ext_loads: np.ndarray | None = None,
     max_iters: int = 10_000,
 ) -> Plan:
     """Vectorized Algorithm 1: batch path-cost evaluation per sweep.
@@ -170,6 +185,14 @@ def _solve_mwu_sweep(
     loads = np.zeros(inc.n_resources, dtype=np.float64)
     if prev_loads is not None:
         loads[:-1] = rm.smooth_loads(prev_loads, loads[:-1])
+    # external (other-tenant) committed load: priced, never accounted.
+    # Adding an all-zero vector is IEEE-exact, so ext_loads=None and zeros
+    # yield bit-identical plans (the arbiter's zero-overhead contract).
+    ext = np.zeros(inc.n_resources, dtype=np.float64)
+    if ext_loads is not None:
+        ext[:-1] = np.asarray(ext_loads, dtype=np.float64)
+        if (ext < 0).any():
+            raise ValueError("ext_loads must be non-negative")
     raw = np.zeros(E, dtype=np.float64)
     flows: Dict[PairKey, List[RoutedFlow]] = {k: [] for k in keys}
     if not keys:
@@ -199,7 +222,7 @@ def _solve_mwu_sweep(
         nb = min(_SUBSWEEPS, alive.size)
         for b in range(nb):
             batch = alive[b::nb]                        # interleaved sub-batch
-            costs = loads / caps                        # refresh per sub-batch
+            costs = (loads + ext) / caps                # refresh per sub-batch
             pc = (
                 np.max(costs[cand_rids[batch]] * cand_mask[batch], axis=-1)
                 + cand_pen[batch]
@@ -249,6 +272,7 @@ def _solve_mwu_sequential(
     lam: float = 0.25,
     eps: float = 1 << 20,
     prev_loads: np.ndarray | None = None,
+    ext_loads: np.ndarray | None = None,
     max_iters: int = 10_000,
 ) -> Plan:
     """Faithful paper loop: costs refreshed after every single assignment."""
@@ -258,6 +282,11 @@ def _solve_mwu_sequential(
     loads = np.zeros(rm.n_resources, dtype=np.float64)
     if prev_loads is not None:
         loads = rm.smooth_loads(prev_loads, loads)
+    ext = np.zeros(rm.n_resources, dtype=np.float64)
+    if ext_loads is not None:
+        ext = ext + np.asarray(ext_loads, dtype=np.float64)
+        if (ext < 0).any():
+            raise ValueError("ext_loads must be non-negative")
     raw = np.zeros(topo.n_links, dtype=np.float64)
 
     residual: Dict[PairKey, float] = {
@@ -270,7 +299,7 @@ def _solve_mwu_sequential(
     it = 0
     while residual and it < max_iters:
         it += 1
-        costs = rm.resource_cost(loads)
+        costs = rm.resource_cost(loads + ext)
         for key in list(residual.keys()):
             r = residual[key]
             cands = path_table[key]
@@ -279,7 +308,7 @@ def _solve_mwu_sequential(
             path = cands[best]
             f = float(_quantized_fraction(np.float64(r), lam, eps))
             _route(loads, raw, rm, path, f)
-            costs = rm.resource_cost(loads)  # refresh after each assignment
+            costs = rm.resource_cost(loads + ext)  # refresh per assignment
             flows[key].append(RoutedFlow(path, float(f)))
             residual[key] = r - f
             if residual[key] <= 1e-9:

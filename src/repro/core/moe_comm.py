@@ -156,7 +156,7 @@ class MoEDispatcher:
 
         dest = (expert_idx // cfg.experts_per_device).reshape(A)  # [A]
         if token_valid is not None:
-            # unowned tokens (replicated-token mode, DESIGN.md §6): route to
+            # unowned tokens (replicated-token mode, DESIGN.md §7): route to
             # a sentinel so they never enter any send buffer.
             avalid = jnp.repeat(token_valid, k)
             dest = jnp.where(avalid, dest, n)                      # sentinel

@@ -70,9 +70,17 @@ def plan_flows(
     tables: PlannerTables,
     cfg: PlannerConfig = PlannerConfig(),
     prev_loads: jnp.ndarray | None = None,
+    ext_loads: jnp.ndarray | None = None,  # [n_resources] external prices
     vary_axis: str | None = None,     # set when called inside shard_map
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (flows [n, n, K] bytes, resource loads [n_resources])."""
+    """Returns (flows [n, n, K] bytes, resource loads [n_resources]).
+
+    ``prev_loads`` is this job's previous load vector, folded through the
+    EMA (``cfg.hysteresis``) into the returned loads.  ``ext_loads`` is
+    other tenants' committed load (the fabric arbiter's exported prices):
+    it raises resource costs during the solve but is **not** carried into
+    the returned loads, and is never EMA-smoothed.
+    """
     n, K = tables.n, tables.K
     caps = jnp.asarray(tables.caps, dtype=jnp.float32)
     # All gather/scatter indexing is precomputed per pair on the incidence
@@ -91,6 +99,9 @@ def plan_flows(
     loads0 = jnp.zeros(tables.n_resources, dtype=jnp.float32)
     if prev_loads is not None:
         loads0 = jnp.float32(cfg.hysteresis) * prev_loads
+    # trace-time branch: ext_loads=None keeps the cost expression (and the
+    # compiled program) bit-identical to the unarbitrated planner
+    ext = None if ext_loads is None else ext_loads.astype(jnp.float32)
 
     # static price-out tiers: relay paths for small messages (_BIG), down
     # paths — bottleneck capacity below _DEAD_PATH_CAP after a link event —
@@ -102,7 +113,8 @@ def plan_flows(
 
     def body(_, state):
         flows, res, loads = state
-        costs = loads / caps                                        # [R]
+        priced = loads if ext is None else loads + ext
+        costs = priced / caps                                       # [R]
         pcK = (
             jnp.max(costs[cand_rids] * cand_mask, axis=-1) + cand_pen
         )                                                           # [n*n, K]
@@ -154,20 +166,30 @@ def plan_flows_batch(
     tables: PlannerTables,
     cfg: PlannerConfig = PlannerConfig(),
     prev_loads: jnp.ndarray | None = None,  # [B, n_resources] or None
+    ext_loads: jnp.ndarray | None = None,   # [B, n_resources] or None
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Plan a batch of demand matrices in one call via ``jax.vmap``.
 
     Multi-tenant / per-expert entry point: B independent demand matrices
     (tenants, MoE layers, microbatches) are planned against the same cached
     incidence tables in a single jit-compiled vectorized MWU, instead of B
-    sequential ``plan_flows`` dispatches.  Returns ``(flows [B, n, n, K],
-    loads [B, n_resources])``.
+    sequential ``plan_flows`` dispatches.  ``ext_loads`` carries per-entry
+    external prices (see :func:`plan_flows`).  Returns ``(flows
+    [B, n, n, K], loads [B, n_resources])``.
     """
-    if prev_loads is None:
+    if prev_loads is None and ext_loads is None:
         return jax.vmap(lambda d: plan_flows(d, tables, cfg))(demand_bytes)
+    if prev_loads is None:
+        return jax.vmap(
+            lambda d, e: plan_flows(d, tables, cfg, ext_loads=e)
+        )(demand_bytes, ext_loads)
+    if ext_loads is None:
+        return jax.vmap(
+            lambda d, p: plan_flows(d, tables, cfg, prev_loads=p)
+        )(demand_bytes, prev_loads)
     return jax.vmap(
-        lambda d, p: plan_flows(d, tables, cfg, prev_loads=p)
-    )(demand_bytes, prev_loads)
+        lambda d, p, e: plan_flows(d, tables, cfg, prev_loads=p, ext_loads=e)
+    )(demand_bytes, prev_loads, ext_loads)
 
 
 def quantize_chunks(

@@ -1,0 +1,307 @@
+"""Fabric arbiter — weighted congestion pricing over N tenants (DESIGN.md §4).
+
+The per-tenant planners (host ``mcf.solve_mwu``, the runtime's jitted
+``plan_flows_batch``) are endpoint-greedy: each minimizes *its own* max
+normalized load on a fabric it believes is empty.  With several tenants on
+one fabric that belief is wrong, and independent replanning stacks every
+tenant onto the same cheap paths.  :class:`FabricArbiter` is the thin
+coordination layer above those planners:
+
+  * it owns the shared :class:`~repro.fabric.state.FabricState` ledger of
+    per-tenant committed load;
+  * it exports **prices** — a tenant's external load scaled by its weight —
+    which the solvers accept via ``ext_loads`` (priced during the solve,
+    excluded from the plan's own accounting);
+  * :meth:`arbitrate` iterates sequential-greedy sweeps over all tenants in
+    a canonical order until plans stop moving, a best-response dynamic
+    whose fixed point is a weighted congestion equilibrium;
+  * :meth:`admit` is the replan admission gate (token bucket + QoS), and
+    :meth:`broadcast` fans link events out to every registered tenant via
+    the shared :class:`~repro.core.topology.LinkEventBus`.
+
+Zero-overhead degradation: with a single registered tenant the external
+load is identically zero, :meth:`prices_for` returns ``None``, the gate
+admits everything, and every solve takes the exact unarbitrated code path
+— plans are bit-identical to today's ``solve_mwu`` /
+``OrchestrationRuntime`` output (enforced by ``tests/test_fabric.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional
+
+import numpy as np
+
+from ..core.cost import CostModel
+from ..core.mcf import PairKey, Plan, solve_mwu
+from ..core.topology import LinkEventBus, Topology
+from ..jsonio import tag
+from .admission import AdmissionConfig, AdmissionDecision, TokenBucket
+from .fairness import fairness_report
+from .state import FabricState
+
+#: canonical planning/priority order of QoS classes (lower rank first)
+QOS_RANK = {"gold": 0, "standard": 1, "scavenger": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantConfig:
+    """Per-tenant share and service class.
+
+    ``weight`` scales exported prices by ``1/weight``: a weight-2 tenant
+    sees peers' load at half price, bids more aggressively for contested
+    resources, and converges to roughly twice the share — weighted
+    congestion pricing.  ``qos`` orders the greedy sweeps and selects
+    admission-gate bypass (``gold``).
+    """
+
+    weight: float = 1.0
+    qos: str = "standard"
+    admission: AdmissionConfig = dataclasses.field(
+        default_factory=AdmissionConfig
+    )
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {self.weight}")
+        if self.qos not in QOS_RANK:
+            raise ValueError(
+                f"unknown qos class {self.qos!r}; one of {sorted(QOS_RANK)}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterConfig:
+    n_sweeps: int = 3   # max sequential-greedy sweeps per arbitrate() call
+
+
+@dataclasses.dataclass
+class ArbiterStats:
+    solves: int = 0        # tenant solves issued by arbitrate()
+    sweeps: int = 0        # greedy sweeps executed
+    admitted: int = 0      # gate passes (incl. bypasses)
+    throttled: int = 0     # gate denials
+    broadcasts: int = 0    # link-event batches published
+    commits: int = 0       # ledger commits
+
+    def to_json_obj(self) -> dict:
+        return tag("fabric_arbiter_stats", dataclasses.asdict(self))
+
+
+def _same_prices(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> bool:
+    if a is None or b is None:
+        return a is None and b is None
+    return np.array_equal(a, b)
+
+
+class FabricArbiter:
+    """Shared congestion-pricing layer above per-tenant MWU planners."""
+
+    def __init__(
+        self,
+        topo: Topology,
+        cost_model: CostModel | None = None,
+        cfg: ArbiterConfig | None = None,
+    ):
+        self.cfg = cfg or ArbiterConfig()
+        self.state = FabricState(topo, cost_model)
+        self.bus = LinkEventBus()
+        self.stats = ArbiterStats()
+        self._tenants: Dict[str, TenantConfig] = {}
+        self._gates: Dict[str, TokenBucket] = {}
+        self._runtimes: Dict[str, object] = {}
+        self._bus_tokens: Dict[str, int] = {}
+
+    # -- registration -----------------------------------------------------------
+    def register(self, name: str, cfg: TenantConfig | None = None) -> str:
+        """Register a tenant by name; returns the name for chaining."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        cfg = cfg or TenantConfig()
+        self._tenants[name] = cfg
+        self._gates[name] = TokenBucket(cfg.admission)
+        return name
+
+    def register_runtime(
+        self, name: str, runtime, cfg: TenantConfig | None = None
+    ) -> str:
+        """Register an :class:`~repro.runtime.OrchestrationRuntime` tenant.
+
+        Binds the runtime to this arbiter (its solves pick up exported
+        prices, its replans pass through the gate, its executed loads are
+        committed to the ledger every window) and subscribes it to the
+        event bus so broadcast link events land in its own event log.
+        """
+        # structural check: same geometry and base capacities.  The final
+        # fingerprint component (per-link degradation scales) is excluded —
+        # a broadcast event rebuilds the ledger's scales immediately while
+        # runtimes apply theirs at window boundaries, so transient scale
+        # divergence between the two views is expected, not an error.
+        if runtime.topo.fingerprint[:-1] != self.state.fingerprint[:-1]:
+            raise ValueError(
+                f"tenant {name!r} topology disagrees with the fabric's — "
+                "all tenants must share one fabric geometry"
+            )
+        self.register(name, cfg)
+        runtime.bind_arbiter(self, name)
+        self._runtimes[name] = runtime
+        self._bus_tokens[name] = self.bus.subscribe(
+            lambda events, rt=runtime: [rt.events.schedule(e) for e in events]
+        )
+        return name
+
+    def unregister(self, name: str) -> None:
+        """Drop a tenant: withdraw its load, unbind, unsubscribe."""
+        self._tenants.pop(name, None)
+        self._gates.pop(name, None)
+        self.state.withdraw(name)
+        runtime = self._runtimes.pop(name, None)
+        if runtime is not None:
+            runtime.bind_arbiter(None, None)
+        token = self._bus_tokens.pop(name, None)
+        if token is not None:
+            self.bus.unsubscribe(token)
+
+    def tenants(self) -> List[str]:
+        return list(self._tenants)
+
+    def tenant_order(self, names: Iterable[str] | None = None) -> List[str]:
+        """Canonical sweep order: QoS rank, then name.
+
+        Registration order is deliberately *not* part of the key, so two
+        arbiters registered in different orders produce identical plans
+        (ordering-determinism invariant, ``tests/test_fabric.py``).
+        """
+        names = self.tenants() if names is None else list(names)
+        for t in names:
+            if t not in self._tenants:
+                raise KeyError(f"tenant {t!r} not registered")
+        return sorted(names, key=lambda t: (QOS_RANK[self._tenants[t].qos], t))
+
+    # -- pricing ----------------------------------------------------------------
+    def prices_for(self, name: str) -> Optional[np.ndarray]:
+        """Exported prices for ``name``: external load over tenant weight.
+
+        ``None`` (not a zero vector) when no peer has committed load, so
+        callers can take the exact unarbitrated solve path — the
+        single-tenant zero-overhead contract.  Prices are non-negative and
+        elementwise monotone in peers' committed load by construction.
+        """
+        if name not in self._tenants:
+            raise KeyError(f"tenant {name!r} not registered")
+        ext = self.state.external_load(name)
+        if not ext.any():
+            return None
+        return ext / self._tenants[name].weight
+
+    def commit(self, name: str, resource_bytes: np.ndarray) -> None:
+        """Telemetry export: replace ``name``'s committed load in the ledger."""
+        if name not in self._tenants:
+            raise KeyError(f"tenant {name!r} not registered")
+        self.state.commit(name, resource_bytes)
+        self.stats.commits += 1
+
+    # -- admission --------------------------------------------------------------
+    def admit(
+        self, name: str, window: int, reason: str = "congestion"
+    ) -> AdmissionDecision:
+        """Gate one replan request (see :mod:`repro.fabric.admission`)."""
+        if name not in self._tenants:
+            raise KeyError(f"tenant {name!r} not registered")
+        gate = self._gates[name]
+        if reason == "topology":
+            verdict = AdmissionDecision(True, "topology", gate.tokens(window))
+        elif len(self._tenants) < 2:
+            verdict = AdmissionDecision(True, "solo", gate.tokens(window))
+        elif self._tenants[name].qos == "gold":
+            verdict = AdmissionDecision(True, "qos", gate.tokens(window))
+        elif gate.try_take(window):
+            verdict = AdmissionDecision(True, "ok", gate.tokens(window))
+        else:
+            verdict = AdmissionDecision(False, "throttled", gate.tokens(window))
+        if verdict.admitted:
+            self.stats.admitted += 1
+        else:
+            self.stats.throttled += 1
+        return verdict
+
+    # -- link events ------------------------------------------------------------
+    def broadcast(self, events) -> int:
+        """Fan one event (or a batch) out to the fabric and every tenant.
+
+        The arbiter has no window clock, so the ledger's topology rebuilds
+        **immediately** regardless of ``LinkEvent.window`` — its capacities
+        feed only drain/fairness accounting, where reflecting the latest
+        known fabric state is the useful behavior.  Registered runtimes
+        receive the events on the bus and apply them **at their own window
+        boundaries**, exactly like locally-scheduled events; same-link
+        batches compose by the shared last-wins rule
+        (:func:`repro.runtime.events.merge_overrides`), so the two views
+        converge once the events fall due.  Returns the listener count.
+        """
+        from ..runtime.events import merge_overrides
+
+        evs = list(events) if isinstance(events, (list, tuple)) else [events]
+        self.state.apply_link_overrides(dict(merge_overrides(evs)))
+        self.stats.broadcasts += 1
+        return self.bus.publish(evs)
+
+    # -- host-level co-planning -------------------------------------------------
+    def arbitrate(
+        self,
+        demands: Mapping[str, Mapping[PairKey, float]],
+        n_sweeps: int | None = None,
+    ) -> Dict[str, Plan]:
+        """Co-plan all tenants to a priced equilibrium (sequential greedy).
+
+        Each sweep walks the canonical tenant order; a tenant whose prices
+        are unchanged since its last solve is at its best response already
+        and is skipped.  Converges in practice within 2-3 sweeps (demand
+        decays geometrically inside each MWU); capped at ``n_sweeps``.
+        """
+        order = self.tenant_order(demands)
+        plans: Dict[str, Plan] = {}
+        solved_prices: Dict[str, Optional[np.ndarray]] = {}
+        for _ in range(n_sweeps or self.cfg.n_sweeps):
+            moved = False
+            for t in order:
+                prices = self.prices_for(t)
+                if t in plans and _same_prices(prices, solved_prices[t]):
+                    continue
+                plan = solve_mwu(
+                    self.state.topo, demands[t], self.state.cm,
+                    ext_loads=prices,
+                )
+                plans[t] = plan
+                solved_prices[t] = prices
+                self.commit(t, plan.resource_bytes)
+                self.stats.solves += 1
+                moved = True
+            self.stats.sweeps += 1
+            if not moved:
+                break
+        return plans
+
+    # -- accounting -------------------------------------------------------------
+    def weights(self) -> Dict[str, float]:
+        return {t: cfg.weight for t, cfg in self._tenants.items()}
+
+    def combined_drain_s(self) -> float:
+        return self.state.combined_drain_s()
+
+    def fairness_report(self) -> dict:
+        """Tagged ``nimble.fabric_fairness/v1`` record for the current ledger."""
+        return fairness_report(self.state, self.weights())
+
+    def to_json_obj(self) -> dict:
+        return tag(
+            "fabric_arbiter",
+            {
+                "tenants": self.tenant_order(),
+                "weights": {t: w for t, w in sorted(self.weights().items())},
+                "stats": self.stats.to_json_obj(),
+                "state": self.state.to_json_obj(),
+                "fairness": self.fairness_report(),
+            },
+        )

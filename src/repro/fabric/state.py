@@ -1,0 +1,134 @@
+"""Shared fabric ledger — per-tenant committed load over one resource vector.
+
+:class:`FabricState` is the arbiter's view of the fabric: one resource
+vector (``cost.ResourceModel``: links, relay caps, inject caps) and, per
+registered tenant, the *effective bytes* that tenant currently has
+committed onto each resource.  Commitments come from two producers:
+
+  * host-level co-planning (:meth:`~repro.fabric.FabricArbiter.arbitrate`)
+    commits each tenant's solved ``Plan.resource_bytes``;
+  * runtime tenants export telemetry every window — the executed plan's
+    per-resource loads land here via ``OrchestrationRuntime.step``.
+
+The ledger is what congestion pricing reads: a tenant's *external load* is
+everyone else's committed bytes, which the MWU solvers accept via
+``ext_loads`` (priced, never accounted).  Loads are effective bytes — they
+depend only on the cost model's charge multipliers, not on link capacities
+— so they stay valid across link down/degrade/restore events; only the
+capacity vector (used for drain-time fairness accounting) is rebuilt, keyed
+by the new topology fingerprint.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..core.cost import CostModel, ResourceModel
+from ..core.topology import Topology
+from ..jsonio import tag
+
+
+class FabricState:
+    """Per-resource committed-load ledger shared by all tenants."""
+
+    def __init__(self, topo: Topology, cost_model: CostModel | None = None):
+        self.cm = cost_model or CostModel()
+        self._committed: "collections.OrderedDict[str, np.ndarray]" = (
+            collections.OrderedDict()
+        )
+        self._set_topology(topo)
+
+    def _set_topology(self, topo: Topology) -> None:
+        self.topo = topo
+        self.rm = ResourceModel(topo, self.cm)
+
+    # -- identity ---------------------------------------------------------------
+    @property
+    def fingerprint(self) -> Tuple:
+        return self.topo.fingerprint
+
+    @property
+    def n_resources(self) -> int:
+        return self.rm.n_resources
+
+    # -- ledger -----------------------------------------------------------------
+    def commit(self, tenant: str, resource_bytes: np.ndarray) -> None:
+        """Replace ``tenant``'s committed load with ``resource_bytes`` [R]."""
+        loads = np.asarray(resource_bytes, dtype=np.float64)
+        if loads.shape != (self.rm.n_resources,):
+            raise ValueError(
+                f"committed loads shape {loads.shape} != "
+                f"({self.rm.n_resources},) — tenant topology disagrees with "
+                "the fabric's"
+            )
+        if (loads < 0).any():
+            raise ValueError(f"negative committed load from tenant {tenant!r}")
+        self._committed[tenant] = loads.copy()
+
+    def withdraw(self, tenant: str) -> None:
+        self._committed.pop(tenant, None)
+
+    def committed_load(self, tenant: str) -> Optional[np.ndarray]:
+        loads = self._committed.get(tenant)
+        return None if loads is None else loads.copy()
+
+    def tenants(self) -> List[str]:
+        return list(self._committed)
+
+    def total_load(self) -> np.ndarray:
+        """Sum of all tenants' committed loads [R] (zeros when empty)."""
+        total = np.zeros(self.rm.n_resources, dtype=np.float64)
+        for loads in self._committed.values():
+            total += loads
+        return total
+
+    def external_load(self, tenant: str) -> np.ndarray:
+        """Everyone-but-``tenant``'s committed load [R] (always >= 0)."""
+        total = self.total_load()
+        own = self._committed.get(tenant)
+        if own is not None:
+            total -= own
+        # float cancellation can leave tiny negatives; prices must not
+        return np.maximum(total, 0.0)
+
+    # -- drain accounting -------------------------------------------------------
+    def drain_time_s(self, loads: np.ndarray) -> float:
+        """Seconds to drain ``loads`` at current capacities (max resource)."""
+        return float(np.max(loads / self.rm.capacity)) if len(loads) else 0.0
+
+    def drain_times(self) -> Dict[str, float]:
+        """Per-tenant drain time of each tenant's own committed load."""
+        return {t: self.drain_time_s(l) for t, l in self._committed.items()}
+
+    def combined_drain_s(self) -> float:
+        """Drain time of the *stacked* fabric load — the co-planning metric."""
+        return self.drain_time_s(self.total_load())
+
+    # -- link events ------------------------------------------------------------
+    def apply_link_overrides(
+        self, overrides: Mapping[Tuple[int, int], float]
+    ) -> Tuple:
+        """Rescale link capacities; returns the new topology fingerprint.
+
+        Geometry is unchanged (same resource vector length), so committed
+        loads remain valid; drain accounting follows the new capacities.
+        """
+        self._set_topology(self.topo.with_link_scale(overrides))
+        return self.fingerprint
+
+    # -- serialization ----------------------------------------------------------
+    def to_json_obj(self) -> dict:
+        drains = self.drain_times()
+        return tag(
+            "fabric_state",
+            {
+                "n_resources": int(self.rm.n_resources),
+                "tenants": sorted(self._committed),
+                "drain_s": {t: drains[t] for t in sorted(drains)},
+                "combined_drain_s": self.combined_drain_s(),
+                "down_links": [int(l) for l in self.topo.down_link_ids()],
+            },
+        )

@@ -142,7 +142,7 @@ def make_moe_ffn(cfg: ModelConfig, ctx: ParallelContext):
         """Tokens replicated over the model axis (small decode batches):
         each model device owns a disjoint round-robin slice, routes only
         owned tokens, and the owned outputs are merged with a psum
-        (DESIGN.md §6)."""
+        (DESIGN.md §7)."""
         pp = {"wg": wg, "wu": wu, "wd": wd}
         me = jax.lax.axis_index(ctx.model_axis)
         T = xf.shape[0]

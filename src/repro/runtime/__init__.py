@@ -4,6 +4,8 @@ The monitor -> estimate -> replan -> swap loop on top of the incidence
 planner core: per-resource telemetry, EWMA + skew-burst demand estimation,
 hysteresis replan triggers, a double-buffered plan cache with atomic
 boundary swaps, and link-fault events that rebuild the planner tables.
+Multiple runtimes sharing one fabric are coordinated by the fabric
+arbiter (``repro.fabric``, DESIGN.md §4) via ``register_runtime``.
 """
 
 from .controller import (

@@ -25,7 +25,14 @@ swap loop on one endpoint:
   * topology events (:mod:`~repro.runtime.events`) rebuild the cached
     incidence tables for the degraded fabric and force an immediate
     replan, discarding any in-flight pending plan solved for the old
-    capacities.
+    capacities;
+  * when bound to a :class:`~repro.fabric.FabricArbiter`
+    (``register_runtime``, DESIGN.md §4), solves price in peers' committed
+    load (``ext_loads``), replans pass the fabric admission gate (throttled
+    decisions surface as ``replan_reason="gated"``), executed loads are
+    exported to the shared ledger every window, and broadcast link events
+    arrive through the shared bus.  Unbound (or solo-tenant) behavior is
+    bit-identical to the standalone runtime.
 
 ``run_trace`` drives the loop over a ``[W, n, n]`` traffic trace as a
 discrete-event simulation through ``fabsim``; ``run_static`` and
@@ -79,8 +86,8 @@ _JIT_PLANNER_CACHE: dict = {}
 _JIT_PLANNER_CAP = 16
 
 
-def _batch_planner(tables, pcfg: PlannerConfig):
-    key = (id(tables), pcfg)
+def _batch_planner(tables, pcfg: PlannerConfig, priced: bool = False):
+    key = (id(tables), pcfg, priced)
     hit = _JIT_PLANNER_CACHE.get(key)
     if hit is not None and hit[0] is tables:
         # LRU: refresh recency so the hot replan-path closure survives
@@ -89,7 +96,14 @@ def _batch_planner(tables, pcfg: PlannerConfig):
         return hit[1]
     import jax
 
-    fn = jax.jit(lambda d: plan_flows_batch(d, tables, pcfg)[0])
+    if priced:
+        # arbitrated variant: external per-resource prices injected into
+        # the solve (fabric arbiter), excluded from the plan's accounting
+        fn = jax.jit(
+            lambda d, e: plan_flows_batch(d, tables, pcfg, ext_loads=e)[0]
+        )
+    else:
+        fn = jax.jit(lambda d: plan_flows_batch(d, tables, pcfg)[0])
     while len(_JIT_PLANNER_CACHE) >= _JIT_PLANNER_CAP:
         _JIT_PLANNER_CACHE.pop(next(iter(_JIT_PLANNER_CACHE)))
     _JIT_PLANNER_CACHE[key] = (tables, fn)
@@ -101,15 +115,34 @@ def solve_plans_batch(
     demands: np.ndarray,            # [B, n, n]
     cost_model: CostModel | None = None,
     planner_cfg: PlannerConfig | None = None,
+    ext_loads: np.ndarray | None = None,   # [B, R] external prices or None
 ) -> List[Plan]:
-    """Solve B demand matrices in ONE jitted ``plan_flows_batch`` call."""
+    """Solve B demand matrices in ONE jitted ``plan_flows_batch`` call.
+
+    ``ext_loads`` (per-entry external committed load over the ``[R]``
+    real resources, e.g. ``FabricArbiter.prices_for``) is priced into the
+    solve but excluded from each returned plan's accounting.  ``None``
+    takes the exact unarbitrated closure — bit-identical plans.
+    """
     import jax.numpy as jnp
 
     tables = build_planner_tables(topo, cost_model)
     pcfg = planner_cfg or PlannerConfig()
-    flows = np.asarray(
-        _batch_planner(tables, pcfg)(jnp.asarray(demands, dtype=jnp.float32))
-    )
+    if ext_loads is None:
+        flows = np.asarray(
+            _batch_planner(tables, pcfg)(
+                jnp.asarray(demands, dtype=jnp.float32)
+            )
+        )
+    else:
+        # pad each price row with the trailing dummy-resource slot
+        ext = np.zeros((len(demands), tables.n_resources), dtype=np.float32)
+        ext[:, :-1] = np.asarray(ext_loads, dtype=np.float32)
+        flows = np.asarray(
+            _batch_planner(tables, pcfg, priced=True)(
+                jnp.asarray(demands, dtype=jnp.float32), jnp.asarray(ext)
+            )
+        )
     return [
         plan_from_flows(
             topo, flows[b], demand_dict(demands[b]), cost_model,
@@ -239,6 +272,11 @@ class OrchestrationRuntime:
             collections.OrderedDict()
         )
         self._pending: Optional[Tuple[PlanHandle, int]] = None
+        # fabric-arbiter binding (FabricArbiter.register_runtime): when set,
+        # solves take arbiter-exported prices, replans pass the admission
+        # gate, and executed loads are committed to the shared ledger
+        self._arbiter = None
+        self._tenant: Optional[str] = None
         self._rebuild_planner()
 
         if initial_demand is None:
@@ -253,27 +291,56 @@ class OrchestrationRuntime:
             source="initial",
         )
 
+    # -- fabric-arbiter binding -------------------------------------------------
+    def bind_arbiter(self, arbiter, tenant: Optional[str]) -> None:
+        """Attach/detach this runtime to a :class:`~repro.fabric.FabricArbiter`.
+
+        Called by ``FabricArbiter.register_runtime`` / ``unregister`` — use
+        those entry points rather than calling this directly, so the
+        ledger, admission gate, and event-bus subscription stay in sync.
+        """
+        self._arbiter = arbiter
+        self._tenant = tenant
+        if arbiter is not None:
+            # warm the priced jitted closure alongside the unpriced one
+            _batch_planner(self.tables, self.cfg.planner, priced=True)
+
+    def _arbiter_prices(self) -> Optional[np.ndarray]:
+        """Exported prices for this tenant (None when unbound or alone)."""
+        if self._arbiter is None:
+            return None
+        return self._arbiter.prices_for(self._tenant)
+
     # -- planner / tables -------------------------------------------------------
     def _rebuild_planner(self) -> None:
         self.tables = build_planner_tables(self.topo, self.cm)
-        # warm the memoized jitted closure for the (possibly new) tables
+        # warm the memoized jitted closure(s) for the (possibly new) tables
         _batch_planner(self.tables, self.cfg.planner)
+        if self._arbiter is not None:
+            _batch_planner(self.tables, self.cfg.planner, priced=True)
 
-    def _solve_batch(self, demands: np.ndarray) -> List[Plan]:
+    def _solve_batch(
+        self, demands: np.ndarray, ext_loads: np.ndarray | None = None
+    ) -> List[Plan]:
         """B demand matrices -> B host plans via one jitted batch solve."""
         self.stats.solves += len(demands)
         return solve_plans_batch(
-            self.topo, demands, self.cm, self.cfg.planner
+            self.topo, demands, self.cm, self.cfg.planner,
+            ext_loads=ext_loads,
         )
 
     def _solve_handle(self, demand: np.ndarray, window: int,
                       source: str) -> Tuple[PlanHandle, bool]:
         """Probe the plan cache, solving on a miss; returns (handle, hit)."""
-        sig = self.demand_signature(demand)
+        prices = self._arbiter_prices()
+        sig = self.demand_signature(demand, prices)
         plan = self._cache_get(sig)
         cache_hit = plan is not None
         if plan is None:
-            plan = self._solve_batch(demand[None])[0]
+            plan = self._solve_batch(
+                demand[None],
+                ext_loads=None if prices is None else prices[None],
+            )[0]
             self._cache_put(sig, plan)
         self._version += 1
         handle = PlanHandle(
@@ -287,21 +354,33 @@ class OrchestrationRuntime:
         return handle, cache_hit
 
     # -- plan cache -------------------------------------------------------------
-    def demand_signature(self, demand: np.ndarray) -> tuple:
+    def demand_signature(
+        self, demand: np.ndarray, prices: Optional[np.ndarray] = None
+    ) -> tuple:
         """(topology fingerprint, scale bucket, quantized shape) cache key.
 
         The shape is quantized to ``signature_levels`` relative levels and
         the magnitude to a power-of-two bucket: MWU split ratios are (up to
         chunk quantization) scale-invariant, so nearby demands share a
         plan; a changed fingerprint (capacities, faults) never matches.
+
+        Arbitrated solves extend the key with the exported price vector,
+        quantized the same way — a plan solved under peers' load must not
+        be served to a solve under different prices (and vice versa).
+        ``prices=None`` leaves the key identical to the unarbitrated one.
         """
-        D = np.asarray(demand, dtype=np.float64)
-        m = float(D.max())
-        if m <= 0:
-            return (self.topo.fingerprint, "zero")
-        q = np.round(D / m * self.cfg.signature_levels).astype(np.int16)
-        scale = int(round(np.log2(max(m, 1.0))))
-        return (self.topo.fingerprint, scale, q.tobytes())
+        def quantize(v: np.ndarray) -> tuple:
+            v = np.asarray(v, dtype=np.float64)
+            m = float(v.max())
+            if m <= 0:
+                return ("zero",)
+            q = np.round(v / m * self.cfg.signature_levels).astype(np.int16)
+            return (int(round(np.log2(max(m, 1.0)))), q.tobytes())
+
+        sig = (self.topo.fingerprint,) + quantize(demand)
+        if prices is None:
+            return sig
+        return sig + quantize(prices)
 
     def _cache_get(self, sig: tuple) -> Optional[Plan]:
         plan = self._cache.get(sig)
@@ -403,6 +482,10 @@ class OrchestrationRuntime:
         )
         sim = simulate(exec_plan, self.cfg.chunk_bytes)
         self.telemetry.record(w, sim, pair_bytes=demand)
+        if self._arbiter is not None:
+            # telemetry export: this window's realized per-resource loads
+            # become this tenant's committed load in the shared ledger
+            self._arbiter.commit(self._tenant, exec_plan.resource_bytes)
 
         # estimate next-window demand and evaluate the triggers
         self.estimator.update(demand)
@@ -416,6 +499,24 @@ class OrchestrationRuntime:
             pending=self._pending is not None,
             topology_event=bool(due),
         )
+        if (
+            decision.replan
+            and self._arbiter is not None
+            and decision.reason != "topology"
+        ):
+            # replan admission gate: a drift burst on one tenant must not
+            # monopolize the shared solver or churn peers' price-keyed
+            # caches; topology-forced replans always pass
+            verdict = self._arbiter.admit(
+                self._tenant, window=w, reason=decision.reason
+            )
+            if not verdict.admitted:
+                decision = dataclasses.replace(
+                    decision, replan=False, reason="gated"
+                )
+                # the fired trigger disarmed the policy but no swap will
+                # follow — re-arm so the tenant retries once tokens refill
+                self.policy.notify_gated()
         cache_hit = False
         if decision.replan:
             _, cache_hit = self._issue_replan(predicted, w)
@@ -473,6 +574,8 @@ class OrchestrationRuntime:
                 self.telemetry.record_loads(
                     self._window, plan.resource_bytes, pair_bytes=D
                 )
+                if self._arbiter is not None:
+                    self._arbiter.commit(self._tenant, plan.resource_bytes)
             self.estimator.update(D)
             self._window += 1
 

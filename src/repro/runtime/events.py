@@ -57,6 +57,21 @@ def link_restored(window: int, src: int, dst: int) -> LinkEvent:
     return LinkEvent(window, src, dst, 1.0)
 
 
+def merge_overrides(events: Iterable[LinkEvent]
+                    ) -> List[Tuple[Tuple[int, int], float]]:
+    """(endpoints, scale) pairs for a batch of events (last one wins).
+
+    The single definition of the override-merge semantics, shared by
+    :meth:`EventLog.overrides` (per-runtime application) and the fabric
+    arbiter's broadcast path — the ledger and the runtimes must never
+    disagree on how same-link events compose.
+    """
+    merged = {}
+    for ev in events:
+        merged[(ev.src, ev.dst)] = ev.scale
+    return list(merged.items())
+
+
 class EventLog:
     """Window-ordered queue of scheduled topology events.
 
@@ -99,7 +114,4 @@ class EventLog:
     def overrides(self, events: Iterable[LinkEvent]
                   ) -> List[Tuple[Tuple[int, int], float]]:
         """(endpoints, scale) pairs for a batch of events (last one wins)."""
-        merged = {}
-        for ev in events:
-            merged[(ev.src, ev.dst)] = ev.scale
-        return list(merged.items())
+        return merge_overrides(events)

@@ -48,7 +48,10 @@ class PolicyConfig:
 @dataclasses.dataclass(frozen=True)
 class ReplanDecision:
     replan: bool
-    reason: str        # "topology" | "congestion" | "staleness" | "none"
+    # "topology" | "congestion" | "staleness" | "none"; an arbitrated
+    # controller may rewrite a positive decision to replan=False with
+    # reason "gated" when the fabric admission gate throttles the tenant
+    reason: str
     ratio: float
     threshold: float
 
@@ -122,6 +125,20 @@ class ReplanPolicy:
         against its own baseline from a clean state.  Without this, a plan
         solved on transitional (mid-drift) demand whose ratio never falls
         below the re-arm watermark would pin the policy disarmed forever.
+        """
+        self._armed = True
+        self._breach = 0
+
+    def notify_gated(self) -> None:
+        """Re-arm when the fabric admission gate cancels a fired trigger.
+
+        :meth:`decide` disarmed on firing, but the gate suppressed the
+        replan — no solve, no swap, so :meth:`notify_swap` will never run.
+        Without re-arming here, a congestion trigger under persistent
+        drift (ratio never falls below the re-arm watermark) would stay
+        disarmed forever and the tenant would never replan again even
+        after its tokens refill.  The trigger cooldown still spaces the
+        retries.
         """
         self._armed = True
         self._breach = 0

@@ -3,7 +3,7 @@
 Carries the mesh + axis roles so model code stays declarative:
 
   * ``data_axes`` — axes sharding batch/tokens (includes "pod": the pod axis
-    is pure data-parallel, DESIGN.md §6);
+    is pure data-parallel, DESIGN.md §7);
   * ``model_axis`` — tensor/expert-parallel axis; this is also the NIMBLE
     orchestration axis (the paper's technique rides the EP all-to-all);
   * ``ep_size``/``moe_mode``/``group_size`` — expert-parallel group geometry
