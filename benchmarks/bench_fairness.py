@@ -20,18 +20,25 @@ Four sections over a 2-group/8-device fabric (DESIGN.md §4):
     pinned elephants on disjoint rails, arbitrated to equilibrium.
 
 Metrics land in ``BENCH_fairness.json`` (tagged ``nimble.bench_fairness/v1``)
-with Jain's index and per-tenant drain times per section.
+with Jain's index and per-tenant drain times per section.  Every arbitrated
+stack is wired through :class:`repro.api.Session` (DESIGN.md §5) — the
+``SessionSpec`` names the tenant, weight, and adaptivity; hand-wiring the
+arbiter is retired here (the facade is bit-identical, pinned by
+``tests/test_session.py``).
 """
 
 from __future__ import annotations
 
+import collections
+
 import numpy as np
 
+from repro.api import Session, SessionSpec
 from repro.core.cost import CostModel
 from repro.core.mcf import solve_direct, solve_mwu
 from repro.core.topology import Topology
-from repro.fabric import FabricArbiter, TenantConfig, jains_index
-from repro.runtime import OrchestrationRuntime, drifting_skew_trace
+from repro.fabric import jains_index
+from repro.runtime import drifting_skew_trace
 
 from .common import emit
 
@@ -80,14 +87,13 @@ def host_coplan(bg_mb: float = 128.0) -> dict:
     ind = solve_mwu(topo, D, cm)
     ind_combined = _stacked_drain(ind.rm, ind.resource_bytes, bg.resource_bytes)
 
-    arb = FabricArbiter(topo, cm)
-    arb.register("skew")
-    arb.register("bg")
-    arb.commit("bg", bg.resource_bytes)
-    plan = solve_mwu(topo, D, cm, ext_loads=arb.prices_for("skew"))
-    arb.commit("skew", plan.resource_bytes)
-    arb_combined = arb.combined_drain_s()
-    fairness = arb.fairness_report()
+    spec = SessionSpec(topology=topo, cost=cm, adaptivity="arbitrated",
+                       tenant="skew")
+    with Session(spec) as sess:
+        sess.join_static_tenant("bg", bg)
+        sess.plan(D)  # priced solve; commits the tenant's load
+        arb_combined = sess.fabric.combined_drain_s()
+        fairness = sess.fabric.fairness_report()
 
     win = ind_combined / arb_combined
     emit(
@@ -117,13 +123,12 @@ def weights_sweep(bg_mb: float = 128.0, weights=(0.5, 1.0, 2.0, 4.0)) -> dict:
 
     points = []
     for w in weights:
-        arb = FabricArbiter(topo, cm)
-        arb.register("skew", TenantConfig(weight=w))
-        arb.register("bg")
-        arb.commit("bg", bg.resource_bytes)
-        plan = solve_mwu(topo, D, cm, ext_loads=arb.prices_for("skew"))
-        arb.commit("skew", plan.resource_bytes)
-        fairness = arb.fairness_report()
+        spec = SessionSpec(topology=topo, cost=cm, adaptivity="arbitrated",
+                           tenant="skew", weight=w)
+        with Session(spec) as sess:
+            sess.join_static_tenant("bg", bg)
+            sess.plan(D)
+            fairness = sess.fabric.fairness_report()
         points.append(
             {
                 "weight": w,
@@ -152,32 +157,42 @@ def runtime_adaptive(bg_mb: float = 192.0, windows: int = 32) -> dict:
     bg_time = bg.resource_bytes / bg.rm.capacity
 
     def replay(arbitrated: bool):
-        rt = OrchestrationRuntime(topo)
-        arb = None
-        if arbitrated:
-            arb = FabricArbiter(topo)
-            arb.register_runtime("skew", rt)
-            arb.register("bg")
-            arb.commit("bg", bg.resource_bytes)
-        combined = own = 0.0
-        for w in range(windows):
-            rt.step(trace[w])
-            t = rt.telemetry.latest(1)[0].per_resource_time
-            combined += float(np.max(t + bg_time))
-            own += float(t.max())
-        return combined, own, rt, arb
+        spec = SessionSpec(
+            topology=topo,
+            adaptivity="arbitrated" if arbitrated else "adaptive",
+            tenant="skew",
+        )
+        with Session(spec) as sess:
+            if arbitrated:
+                sess.join_static_tenant("bg", bg)
+            combined = own = 0.0
+            reports = []
+            for w in range(windows):
+                reports.append(sess.step(trace[w]))
+                t = sess.runtime.telemetry.latest(1)[0].per_resource_time
+                combined += float(np.max(t + bg_time))
+                own += float(t.max())
+            replans = sess.runtime.stats.replans
+            throttled = sess.fabric.stats.throttled if arbitrated else 0
+        return combined, own, replans, throttled, reports
 
-    ind_combined, ind_own, _, _ = replay(False)
-    arb_combined, arb_own, rt, arb = replay(True)
+    ind_combined, ind_own, _, _, _ = replay(False)
+    arb_combined, arb_own, replans, throttled, reports = replay(True)
     win = ind_combined / arb_combined
     bg_total = float(bg_time.max()) * windows
     jain = jains_index([arb_own, bg_total])
+    # gated vs no-trigger accounting (WindowReport.trigger_reason): a
+    # "gated" window fired a real trigger that the fabric gate suppressed
+    gated = [r.window for r in reports if r.replan_reason == "gated"]
+    gated_triggers = dict(collections.Counter(
+        r.trigger_reason for r in reports if r.replan_reason == "gated"
+    ))
     emit(
         f"fairness/runtime/W{windows}",
         arb_combined * 1e6,
         f"independent={ind_combined * 1e3:.1f}ms "
         f"arbitrated={arb_combined * 1e3:.1f}ms win={win:.2f}x "
-        f"replans={rt.stats.replans} gated={arb.stats.throttled} "
+        f"replans={replans} gated={throttled} "
         f"jain={jain:.3f}",
     )
     return {
@@ -186,8 +201,10 @@ def runtime_adaptive(bg_mb: float = 192.0, windows: int = 32) -> dict:
         "independent_combined_drain_s": ind_combined,
         "arbitrated_combined_drain_s": arb_combined,
         "win": win,
-        "replans": rt.stats.replans,
-        "throttled": arb.stats.throttled,
+        "replans": replans,
+        "throttled": throttled,
+        "gated_windows": gated,
+        "gated_triggers": gated_triggers,
         "jain_index": jain,
         "drain_s": {"skew": arb_own, "bg": bg_total},
     }
@@ -212,21 +229,27 @@ def four_tenant(bg_mb: float = 96.0) -> dict:
     rm = pinned["ele01"].rm
     ind_combined = _stacked_drain(rm, *ind_loads)
 
-    arb = FabricArbiter(topo, cm)
-    for name in list(demands) + list(pinned):
-        arb.register(name)
-    for name, plan in pinned.items():
-        arb.commit(name, plan.resource_bytes)
-    arb.arbitrate(demands)
-    arb_combined = arb.combined_drain_s()
-    fairness = arb.fairness_report()
+    # one session owns the fabric; the second MWU tenant and the pinned
+    # elephants join it as plain ledger tenants, then co-plan to the
+    # priced equilibrium via the fabric's arbitrate()
+    spec = SessionSpec(topology=topo, cost=cm, adaptivity="arbitrated",
+                       tenant="skew0")
+    with Session(spec) as sess:
+        arb = sess.fabric
+        arb.register("skew4")
+        for name, plan in pinned.items():
+            sess.join_static_tenant(name, plan)
+        arb.arbitrate(demands)
+        arb_combined = arb.combined_drain_s()
+        fairness = arb.fairness_report()
+        solves = arb.stats.solves
     win = ind_combined / arb_combined
     emit(
         "fairness/four_tenant",
         arb_combined * 1e6,
         f"independent={ind_combined * 1e3:.2f}ms "
         f"arbitrated={arb_combined * 1e3:.2f}ms win={win:.2f}x "
-        f"jain={fairness['jain_index']:.3f} solves={arb.stats.solves}",
+        f"jain={fairness['jain_index']:.3f} solves={solves}",
     )
     return {
         "independent_combined_drain_s": ind_combined,
@@ -234,7 +257,7 @@ def four_tenant(bg_mb: float = 96.0) -> dict:
         "win": win,
         "jain_index": fairness["jain_index"],
         "drain_s": fairness["drain_s"],
-        "solves": arb.stats.solves,
+        "solves": solves,
     }
 
 

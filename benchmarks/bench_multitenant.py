@@ -4,11 +4,12 @@ The paper argues NIMBLE complements the fabric's congestion-control layer:
 by re-slicing a job's traffic over live link costs it avoids per-job
 hotspotting even when *other tenants* load part of the fabric.  We model a
 background tenant as elephant flows pinned (direct-routed) onto a subset
-of rails, commit its load to the :class:`~repro.fabric.FabricArbiter`
-ledger, and solve our job with the arbiter's exported prices
-(``ext_loads`` — priced during the solve, excluded from the plan's own
-accounting).  Combined fabric drain time is compared against
-load-oblivious direct routing and static striping.
+of rails, joined to an arbitrated :class:`repro.api.Session`'s fabric
+ledger; the session's ``plan()`` solves our job with the arbiter's
+exported prices (``ext_loads`` — priced during the solve, excluded from
+the plan's own accounting).  Combined fabric drain time is compared
+against load-oblivious direct routing and static striping (both also
+served by the same session, unpriced by construction).
 
 Historical note: before the arbiter this bench injected the background
 load as ``prev_loads=2.0 * bg_bytes`` — the factor 2 *undoing* the
@@ -24,12 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Session, SessionSpec
 from repro.core.cost import CostModel
-from repro.core.mcf import solve_direct, solve_mwu, solve_static_striping
+from repro.core.mcf import solve_direct
 from repro.core.planner import PlannerConfig, plan_flows, plan_flows_batch
 from repro.core.schedule import build_planner_tables
 from repro.core.topology import Topology
-from repro.fabric import FabricArbiter
 
 from .common import emit, time_fn
 
@@ -62,20 +63,19 @@ def run() -> None:
         bg = solve_direct(topo, bg_D, cm) if bg_mb else None
         bg_bytes = bg.resource_bytes if bg else 0.0
 
-        arbiter = FabricArbiter(topo, cm)
-        arbiter.register("job")
-        if bg_mb:
-            arbiter.register("bg")
-            arbiter.commit("bg", bg.resource_bytes)
-        plans = {
-            # NIMBLE sees live load via the arbiter's exported prices
-            # (None when the fabric is otherwise empty — identical solve)
-            "nimble": solve_mwu(
-                topo, D, cm, ext_loads=arbiter.prices_for("job")
-            ),
-            "direct": solve_direct(topo, D, cm),
-            "stripe": solve_static_striping(topo, D, cm),
-        }
+        spec = SessionSpec(topology=topo, cost=cm, adaptivity="arbitrated",
+                           tenant="job")
+        with Session(spec) as sess:
+            if bg_mb:
+                sess.join_static_tenant("bg", bg)
+            plans = {
+                # NIMBLE sees live load via the fabric's exported prices
+                # (None when the fabric is otherwise empty — identical
+                # solve); the static baselines are unpriced by definition
+                "nimble": sess.plan(D),
+                "direct": sess.plan(D, mode="direct"),
+                "stripe": sess.plan(D, mode="stripe"),
+            }
         times = {}
         for name, plan in plans.items():
             # resource_bytes is own traffic only — ext prices are priced

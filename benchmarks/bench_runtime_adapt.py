@@ -20,7 +20,10 @@ Scenarios mirror the runtime acceptance criteria:
 
 Metrics land in ``BENCH_runtime_adapt.json`` (tagged
 ``nimble.bench_runtime_adapt/v1``) for the per-PR bench trajectory and
-``experiments/make_report.py``.
+``experiments/make_report.py``.  All three policies run through
+:class:`repro.api.Session` (DESIGN.md §5): static vs adaptive is a
+one-field ``SessionSpec`` diff, and the oracle is the session's
+``run_oracle`` bookend.
 """
 
 from __future__ import annotations
@@ -29,15 +32,13 @@ import time
 
 import numpy as np
 
+from repro.api import Session, SessionSpec
 from repro.core.topology import Topology
 from repro.runtime import (
     EventLog,
-    OrchestrationRuntime,
     balanced_trace,
     drifting_skew_trace,
     link_down,
-    run_oracle,
-    run_static,
 )
 
 from .common import emit
@@ -46,20 +47,21 @@ N = 8
 GROUP = 4
 
 
-def _runtime(topo, **kw) -> OrchestrationRuntime:
-    return OrchestrationRuntime(topo, **kw)
+def _session(topo, **kw) -> Session:
+    return Session(SessionSpec(topology=topo, adaptivity="adaptive", **kw))
 
 
 def drift_section(windows: int = 48, dwell: int = 12) -> dict:
     topo = Topology(N, group_size=GROUP)
     trace = drifting_skew_trace(N, windows, dwell=dwell)
 
-    static = run_static(topo, trace)
-    oracle = run_oracle(topo, trace)
-    rt = _runtime(topo)
-    t0 = time.perf_counter()
-    adaptive = rt.run_trace(trace)
-    us_adaptive = (time.perf_counter() - t0) * 1e6
+    with Session(SessionSpec(topology=topo)) as static_sess:
+        static = static_sess.run_trace(trace)
+    with _session(topo) as sess:
+        oracle = sess.run_oracle(trace)
+        t0 = time.perf_counter()
+        adaptive = sess.run_trace(trace)
+        us_adaptive = (time.perf_counter() - t0) * 1e6
 
     speedup = static.total_completion_s / adaptive.total_completion_s
     oracle_speedup = static.total_completion_s / oracle.total_completion_s
@@ -90,9 +92,10 @@ def drift_section(windows: int = 48, dwell: int = 12) -> dict:
 def balanced_section(windows: int = 30) -> dict:
     topo = Topology(N, group_size=GROUP)
     trace = balanced_trace(N, windows)
-    static = run_static(topo, trace)
-    rt = _runtime(topo)
-    adaptive = rt.run_trace(trace)
+    with Session(SessionSpec(topology=topo)) as static_sess:
+        static = static_sess.run_trace(trace)
+    with _session(topo) as sess:
+        adaptive = sess.run_trace(trace)
     ratio = adaptive.total_completion_s / static.total_completion_s
     emit(
         f"runtime/balanced/W{windows}", 0.0,
@@ -110,8 +113,8 @@ def linkdown_section(windows: int = 24, fail_at: int = 8) -> dict:
     topo = Topology(N, group_size=GROUP)
     trace = balanced_trace(N, windows)
     events = EventLog([link_down(fail_at, 0, GROUP)])
-    rt = _runtime(topo, events=events)
-    res = rt.run_trace(trace)
+    with _session(topo) as sess:
+        res = sess.run_trace(trace, events=events)
     pre = np.median([r.completion_s for r in res.reports[:fail_at]])
     # convergence: first window after the fault whose completion is within
     # 2x the pre-fault median (the degraded fabric has less capacity, so

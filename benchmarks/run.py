@@ -17,7 +17,10 @@ writes the aggregate to benchmarks/results.csv.
 sections in a few seconds and writes ``BENCH_algo_overhead.json`` /
 ``BENCH_runtime_adapt.json`` / ``BENCH_fairness.json`` at the repo root,
 so planner-latency, adaptation, and arbitration regressions show up in the
-bench trajectory on every PR.
+bench trajectory on every PR.  It finishes with a ``session_api`` check:
+one arbitrated two-tenant window through the ``repro.api.Session`` facade,
+with the exported JSON validated against the ``nimble.fabric_fairness/v1``
+schema (the full facade selfcheck is ``python -m repro.api.selfcheck``).
 """
 
 from __future__ import annotations
@@ -66,6 +69,11 @@ def smoke() -> None:
         bench_fairness.smoke(),
         kind="bench_fairness",
     )
+    print("# --- session_api (smoke) ---")
+    from repro.api.selfcheck import smoke_session_check
+
+    check = smoke_session_check()  # raises on schema violation
+    print(f"# session_api: {check['summary']}")
     print(
         f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}, {out3}"
     )

@@ -1,12 +1,17 @@
 """Quickstart — NIMBLE's control plane in 60 seconds.
 
-Builds the paper's testbed topology (2 nodes x 4 GPUs, 4 rails), creates a
-skewed All-to-Allv demand, and compares three routing policies on the
-calibrated fabric simulator:
+One :class:`repro.api.Session` is the whole setup: a declarative
+``SessionSpec`` names the paper's testbed fabric (2 nodes x 4 GPUs, 4
+rails) and the session hands out ready-wired planning for the three
+routing policies compared on the calibrated fabric simulator:
 
   * ``direct``  — static least-hop routing (NCCL/PXN-like baseline),
   * ``stripe``  — static even multi-rail striping (UCX-like baseline),
   * ``nimble``  — the paper's execution-time multiplicative-weights MCF.
+
+(The old hand-wired path — ``Topology`` + ``mcf.solve_*`` — still works
+and produces bit-identical plans; the Session is the recommended front
+door.  See DESIGN.md §5.)
 
 Then instantiates one of the assigned model architectures (reduced size) and
 runs a forward pass, showing the model registry side of the framework.
@@ -15,10 +20,8 @@ Run:
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
+from repro.api import Session, SessionSpec, TopologySpec
 from repro.core import fabsim, mcf
-from repro.core.topology import Topology
 
 
 def skewed_demand(n: int, total_bytes: float, hotspot: float, hot_dst: int = 0):
@@ -36,34 +39,35 @@ def skewed_demand(n: int, total_bytes: float, hotspot: float, hot_dst: int = 0):
 
 def main():
     # ---- 1. control plane: plan + simulate a skewed exchange ---------------
-    topo = Topology(n_devices=8, group_size=4)     # 2 "nodes" x 4 "GPUs"
-    print(f"topology: {topo.n_devices} devices, {topo.n_groups} groups, "
-          f"{len(topo.links)} directed links")
+    spec = SessionSpec(topology=TopologySpec(n_devices=8, group_size=4))
+    with Session(spec) as sess:                    # 2 "nodes" x 4 "GPUs"
+        topo = sess.topo
+        print(f"topology: {topo.n_devices} devices, {topo.n_groups} groups, "
+              f"{len(topo.links)} directed links")
 
-    msg = 64 * 2**20                               # 64 MB per source
-    print(f"\n{'hotspot':>8s} {'direct':>10s} {'stripe':>10s} {'nimble':>10s} "
-          f"{'speedup':>8s}  bottleneck")
-    for hot in [0.125, 0.3, 0.5, 0.7, 0.9]:
-        demands = skewed_demand(8, msg, hot)
-        plans = {
-            "direct": mcf.solve_direct(topo, demands),
-            "stripe": mcf.solve_static_striping(topo, demands),
-            "nimble": mcf.solve_mwu(topo, demands),
-        }
-        res = fabsim.compare(plans)
-        t = {k: r.completion_time * 1e3 for k, r in res.items()}
-        speed = t["direct"] / t["nimble"]
-        print(f"{hot:8.3f} {t['direct']:9.2f}ms {t['stripe']:9.2f}ms "
-              f"{t['nimble']:9.2f}ms {speed:7.2f}x  "
-              f"{res['nimble'].bottleneck_kind(plans['nimble'])}")
+        msg = 64 * 2**20                           # 64 MB per source
+        print(f"\n{'hotspot':>8s} {'direct':>10s} {'stripe':>10s} "
+              f"{'nimble':>10s} {'speedup':>8s}  bottleneck")
+        for hot in [0.125, 0.3, 0.5, 0.7, 0.9]:
+            demands = skewed_demand(8, msg, hot)
+            plans = {
+                mode: sess.plan(demands, mode=mode)
+                for mode in ("direct", "stripe", "nimble")
+            }
+            res = fabsim.compare(plans)
+            t = {k: r.completion_time * 1e3 for k, r in res.items()}
+            speed = t["direct"] / t["nimble"]
+            print(f"{hot:8.3f} {t['direct']:9.2f}ms {t['stripe']:9.2f}ms "
+                  f"{t['nimble']:9.2f}ms {speed:7.2f}x  "
+                  f"{res['nimble'].bottleneck_kind(plans['nimble'])}")
 
-    # optimality: compare against the capacity-normalized congestion LB
-    demands = skewed_demand(8, msg, 0.7)
-    plan = mcf.solve_mwu(topo, demands)
-    lb = mcf.congestion_lower_bound(topo, demands)
-    z = fabsim.simulate(plan).completion_time
-    print(f"\nMWU congestion vs lower bound: {z:.4f}s vs {lb:.4f}s "
-          f"(gap {100 * (z / lb - 1):.1f}%)")
+        # optimality: compare against the capacity-normalized congestion LB
+        demands = skewed_demand(8, msg, 0.7)
+        plan = sess.plan(demands)
+        lb = mcf.congestion_lower_bound(topo, demands)
+        z = fabsim.simulate(plan).completion_time
+        print(f"\nMWU congestion vs lower bound: {z:.4f}s vs {lb:.4f}s "
+              f"(gap {100 * (z / lb - 1):.1f}%)")
 
     # ---- 2. model registry: one assigned arch, reduced, forward pass -------
     import jax

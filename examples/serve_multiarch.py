@@ -12,9 +12,12 @@ Run:
 With ``--adaptive``, additionally routes a drifting expert-traffic trace
 through the execution-time orchestration runtime (telemetry -> estimate ->
 replan -> hot swap) and reports the adaptive-vs-static completion-time
-ratio — the serving-side view of DESIGN.md §3 — then re-registers the
-runtime as a fabric-arbiter tenant next to a background elephant job and
-reports the arbitrated combined-drain win and Jain fairness (DESIGN.md §4).
+ratio — the serving-side view of DESIGN.md §3 — then re-runs the serving
+tenant as a fabric-arbitrated session next to a background elephant job
+and reports the arbitrated combined-drain win and Jain fairness (DESIGN.md
+§4).  All stacks are built through ``repro.api.Session`` (DESIGN.md §5):
+one ``SessionSpec`` field — ``adaptivity`` — selects static / adaptive /
+arbitrated, replacing the runtime + arbiter + telemetry hand-wiring.
 """
 
 import sys
@@ -42,72 +45,74 @@ def adaptive_demo():
     Models the communication side of MoE serving under shifting request
     mix: the receive hotspot (the popular expert's device) migrates, the
     runtime's telemetry/estimator detect the drift, and plans are re-solved
-    off the hot path and hot-swapped between rounds.
+    off the hot path and hot-swapped between rounds.  The adaptive and
+    static stacks differ by one ``SessionSpec`` field.
     """
-    from repro.core.topology import Topology
-    from repro.runtime import (
-        OrchestrationRuntime,
-        drifting_skew_trace,
-        run_static,
-    )
+    from repro.api import Session, SessionSpec, TopologySpec
+    from repro.runtime import drifting_skew_trace
 
     n = 8
-    topo = Topology(n, group_size=4)
+    tspec = TopologySpec(n_devices=n, group_size=4)
     trace = drifting_skew_trace(n, windows=36, dwell=9)
-    runtime = OrchestrationRuntime(topo)
-    adaptive = runtime.run_trace(trace)
-    static = run_static(topo, trace)
+    with Session(SessionSpec(topology=tspec, adaptivity="adaptive",
+                             tenant="serve")) as sess:
+        adaptive = sess.run_trace(trace)
+        rec = sess.report()
+    with Session(SessionSpec(topology=tspec)) as static_sess:
+        static = static_sess.run_trace(trace)
     speedup = static.total_completion_s / adaptive.total_completion_s
-    agg = runtime.telemetry.aggregate()
     print(
         f"[serve] adaptive runtime: {len(trace)} windows, "
         f"{len(adaptive.replan_windows)} replans "
         f"({adaptive.replan_fraction:.0%}), "
-        f"{runtime.cache_info()['hits']} cache hits, "
+        f"{rec['cache']['hits']} cache hits, "
         f"speedup vs static plan {speedup:.2f}x, "
-        f"link-util imbalance {agg['utilization_imbalance']:.2f}"
+        f"link-util imbalance "
+        f"{rec['telemetry']['utilization_imbalance']:.2f}"
     )
-    multitenant_demo(topo, trace)
+    multitenant_demo(tspec, trace)
     return speedup
 
 
-def multitenant_demo(topo, trace):
+def multitenant_demo(tspec, trace):
     """Fabric-arbiter demo: the same serving tenant sharing the fabric.
 
     A second tenant's elephant flows (direct-routed, e.g. a legacy job the
-    arbiter cannot re-plan) are committed to the shared ledger; the serving
-    runtime re-registers as an arbitrated tenant, so its replans price the
+    arbiter cannot re-plan) join the session's fabric as a static tenant;
+    the serving session runs arbitrated, so its replans price the
     background in and route around it.  Reports the combined-fabric win
     over oblivious replanning plus the fairness account (DESIGN.md §4).
     """
+    from repro.api import Session, SessionSpec
     from repro.core.mcf import solve_direct
-    from repro.fabric import FabricArbiter, jains_index
-    from repro.runtime import OrchestrationRuntime
+    from repro.fabric import jains_index
 
     MB = float(1 << 20)
     bg_D = {(0, 4): 160 * MB, (4, 0): 160 * MB,
             (1, 5): 160 * MB, (5, 1): 160 * MB}
-    bg = solve_direct(topo, bg_D)
+    bg = solve_direct(tspec.build(), bg_D)
     bg_time = bg.resource_bytes / bg.rm.capacity
 
     def replay(arbitrated):
-        rt = OrchestrationRuntime(topo)
-        arb = None
-        if arbitrated:
-            arb = FabricArbiter(topo)
-            arb.register_runtime("serve", rt)
-            arb.register("bg")
-            arb.commit("bg", bg.resource_bytes)
-        combined = own = 0.0
-        for w in range(len(trace)):
-            rt.step(trace[w])
-            t = rt.telemetry.latest(1)[0].per_resource_time
-            combined += float(np.max(t + bg_time))
-            own += float(t.max())
-        return combined, own, arb
+        spec = SessionSpec(
+            topology=tspec,
+            adaptivity="arbitrated" if arbitrated else "adaptive",
+            tenant="serve",
+        )
+        with Session(spec) as sess:
+            if arbitrated:
+                sess.join_static_tenant("bg", bg)
+            combined = own = 0.0
+            for w in range(len(trace)):
+                sess.step(trace[w])
+                t = sess.runtime.telemetry.latest(1)[0].per_resource_time
+                combined += float(np.max(t + bg_time))
+                own += float(t.max())
+            commits = sess.fabric.stats.commits if arbitrated else 0
+        return combined, own, commits
 
     oblivious, _, _ = replay(False)
-    arbitrated, serve_drain, arb = replay(True)
+    arbitrated, serve_drain, commits = replay(True)
     # Jain over *accumulated* per-tenant drains (the ledger only holds the
     # serving tenant's last window, so fairness_report() would compare one
     # window of serve traffic against the whole background job)
@@ -117,7 +122,7 @@ def multitenant_demo(topo, trace):
         f"{oblivious * 1e3:.1f}ms oblivious -> {arbitrated * 1e3:.1f}ms "
         f"arbitrated ({oblivious / arbitrated:.2f}x), "
         f"Jain {jain:.3f}, "
-        f"{arb.stats.commits} ledger commits"
+        f"{commits} ledger commits"
     )
 
 

@@ -5,6 +5,8 @@ plan, it runs the actual ``shard_map`` dataplane — live demand matrix ->
 jittable MWU planner -> scheduled ``lax.ppermute`` rounds — and verifies the
 result bit-exactly against a numpy oracle for all three modes, under a
 hotspot-ratio sweep (paper Fig. 7 setup: 8 ranks = 2 nodes x 4 GPUs).
+The dataplane endpoints come ready-wired from one ``repro.api.Session``
+(``session.all_to_all``, DESIGN.md §5).
 
 Because the container is CPU-only, wall-clock here is NOT bandwidth — the
 projected completion times come from the planner's own link-time model
@@ -24,10 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import fabsim, mcf
-from repro.core.dataplane import NimbleAllToAll, ref_all_to_allv
+from repro.api import Session, SessionSpec, TopologySpec
+from repro.core import fabsim
+from repro.core.dataplane import ref_all_to_allv
 from repro.core.jax_compat import shard_map
-from repro.core.topology import Topology
 
 
 def skewed_counts(n, max_chunks, hotspot, rng):
@@ -48,37 +50,38 @@ def main():
     mesh = Mesh(np.array(jax.devices()[:n]), ("x",))
     rng = np.random.default_rng(0)
 
-    for hotspot in [0.3, 0.7, 0.9]:
-        counts = skewed_counts(n, C, hotspot, rng)
-        x_all = rng.normal(size=(n, n, C, E)).astype(np.float32)
-        for s in range(n):
-            for d in range(n):
-                x_all[s, d, counts[s, d]:] = 0.0
-        yref, rref = ref_all_to_allv(x_all, counts)
+    spec = SessionSpec(topology=TopologySpec(n_devices=n, group_size=4))
+    with Session(spec) as sess:
+        for hotspot in [0.3, 0.7, 0.9]:
+            counts = skewed_counts(n, C, hotspot, rng)
+            x_all = rng.normal(size=(n, n, C, E)).astype(np.float32)
+            for s in range(n):
+                for d in range(n):
+                    x_all[s, d, counts[s, d]:] = 0.0
+            yref, rref = ref_all_to_allv(x_all, counts)
 
-        print(f"\nhotspot={hotspot}")
-        for mode in ["direct", "stripe", "nimble"]:
-            comm = NimbleAllToAll("x", n, group_size=4, max_chunks=C,
-                                  chunk_bytes=E * 4, mode=mode)
-            fn = shard_map(lambda x, c: comm(x, c), mesh=mesh,
-                           in_specs=(P("x"), P("x")),
-                           out_specs=(P("x"), P("x")))
-            y, r = jax.jit(fn)(jnp.asarray(x_all.reshape(n * n, C, E)),
-                               jnp.asarray(counts.reshape(n * n)))
-            ok = (np.allclose(np.asarray(y).reshape(n, n, C, E), yref)
-                  and np.array_equal(np.asarray(r).reshape(n, n), rref))
+            print(f"\nhotspot={hotspot}")
+            for mode in ["direct", "stripe", "nimble"]:
+                comm = sess.all_to_all("x", max_chunks=C, chunk_bytes=E * 4,
+                                       mode=mode)
+                fn = shard_map(lambda x, c: comm(x, c), mesh=mesh,
+                               in_specs=(P("x"), P("x")),
+                               out_specs=(P("x"), P("x")))
+                y, r = jax.jit(fn)(jnp.asarray(x_all.reshape(n * n, C, E)),
+                                   jnp.asarray(counts.reshape(n * n)))
+                ok = (np.allclose(np.asarray(y).reshape(n, n, C, E), yref)
+                      and np.array_equal(np.asarray(r).reshape(n, n), rref))
 
-            # projected completion time on the calibrated fabric
-            topo = Topology(n, group_size=4)
-            demands = {(s, d): float(counts[s, d]) * E * 4 * 2**14
-                       for s in range(n) for d in range(n) if counts[s, d]}
-            solver = {"direct": mcf.solve_direct,
-                      "stripe": mcf.solve_static_striping,
-                      "nimble": mcf.solve_mwu}[mode]
-            t = fabsim.simulate(solver(topo, demands)).completion_time
-            print(f"  {mode:7s} bit-exact={'OK' if ok else 'FAIL'}   "
-                  f"projected completion {t * 1e3:8.3f} ms")
-            assert ok, f"dataplane {mode} mismatch"
+                # projected completion time on the calibrated fabric
+                demands = {(s, d): float(counts[s, d]) * E * 4 * 2**14
+                           for s in range(n) for d in range(n)
+                           if counts[s, d]}
+                t = fabsim.simulate(
+                    sess.plan(demands, mode=mode)
+                ).completion_time
+                print(f"  {mode:7s} bit-exact={'OK' if ok else 'FAIL'}   "
+                      f"projected completion {t * 1e3:8.3f} ms")
+                assert ok, f"dataplane {mode} mismatch"
     print("\nall modes bit-exact vs oracle")
 
 

@@ -4,7 +4,10 @@ Trains a granite-family MoE LM on a (data=2, model=4) mesh of 8 forced host
 devices.  The experts are sharded over the model axis; every train step's
 token dispatch/combine is a skewed All-to-Allv executed by the NIMBLE
 dataplane (live demand -> jittable MWU plan -> scheduled ppermute rounds).
-Exactly the paper's §V-D workload, end to end in JAX.
+Exactly the paper's §V-D workload, end to end in JAX.  The dispatch stack
+is wired through one ``repro.api.Session`` describing the EP fabric
+(``ParallelContext.session``, DESIGN.md §5) — no per-application planner
+or telemetry plumbing.
 
 Presets:
     default : ~8M params,  200 steps  — a couple of minutes on CPU
@@ -27,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Session, SessionSpec, TopologySpec
 from repro.configs.base import get_config
 from repro.core.jax_compat import set_mesh
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -69,8 +73,13 @@ def main(argv=None):
         seq = args.seq or 128
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
+    # one declarative session describes the EP fabric (4 chips = 2 "nodes"
+    # x 2) and hands the model zoo ready-wired NIMBLE dispatchers
+    session = Session(SessionSpec(
+        topology=TopologySpec(n_devices=4, group_size=2), tenant="moe-train",
+    ))
     ctx = ParallelContext(mesh=mesh, data_axes=("data",), ep_size=4,
-                          group_size=2, moe_mode=args.mode)
+                          group_size=2, moe_mode=args.mode, session=session)
     model = build_model(cfg, ctx)
     params = model.init(jax.random.PRNGKey(args.seed))
     n_par = sum(x.size for x in jax.tree.leaves(params))
@@ -102,6 +111,7 @@ def main(argv=None):
     print(f"[moe-train] loss {first:.4f} -> {last:.4f} "
           f"({'improved' if last < first else 'NOT improved'})")
     assert last < first, "training did not reduce loss"
+    session.close()
     return losses
 
 

@@ -138,6 +138,25 @@ def fairness_section():
             for p in pts
         )
     )
+    # gated vs no-trigger windows (WindowReport.trigger_reason): "gated"
+    # means a real trigger fired and the fabric gate suppressed it — not
+    # the same as a window where nothing triggered at all
+    gated = r.get("gated_windows")
+    if gated is not None:
+        triggers = r.get("gated_triggers") or {}
+        detail = (
+            " (" + ", ".join(
+                f"{k} x{v}" for k, v in sorted(triggers.items())
+            ) + ")"
+            if triggers
+            else ""
+        )
+        print(
+            f"\narbitrated runtime: {len(gated)} gated window(s) "
+            f"{detail or '(none)'} out of {r['windows']} — triggers "
+            "suppressed by the admission gate, distinct from "
+            "trigger-free windows"
+        )
 
 
 def main():

@@ -1,0 +1,173 @@
+"""Declarative session specification — everything a NIMBLE stack needs.
+
+The paper's integration claim is that NIMBLE is *endpoint-driven* and
+plugs into existing communication libraries "without requiring application
+changes".  After the planner (DESIGN.md §2), runtime (§3), and fabric
+arbiter (§4) landed, the wiring to get there was anything but declarative:
+every caller hand-built ``Topology`` + ``CostModel`` + ``PlannerConfig`` +
+``OrchestrationRuntime`` + ``FabricArbiter`` and called
+``attach_telemetry`` / ``register_runtime`` in exactly the right order.
+:class:`SessionSpec` replaces that plumbing with one frozen value object:
+*what* fabric, *which* tenant, *how much* adaptivity — and
+:class:`~repro.api.session.Session` turns it into a wired stack.
+
+Adaptivity levels (strictly increasing capability):
+
+  * ``"static"``     — planner only.  ``plan()`` / ``run_trace()`` solve
+    one-shot; endpoints carry no telemetry.  Construction-equivalent to
+    PR 1's hand wiring.
+  * ``"adaptive"``   — adds an :class:`~repro.runtime.OrchestrationRuntime`
+    (monitor → estimate → replan → swap); endpoints auto-attach telemetry.
+  * ``"arbitrated"`` — additionally joins a shared
+    :class:`~repro.fabric.FabricArbiter` as tenant ``tenant`` (weight /
+    QoS / admission from this spec): solves are congestion-priced, replans
+    gated, link events and price hints arrive over the shared bus.
+
+Every ``None`` field falls through to the exact library default the
+hand-wired constructors use, which is what makes the facade's bit-exactness
+guarantee (``tests/test_session.py``) possible at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple, Union
+
+from ..core.cost import CostModel
+from ..core.planner import PlannerConfig
+from ..core.topology import LinkCaps, Topology
+from ..fabric import AdmissionConfig, ArbiterConfig, QOS_RANK, TenantConfig
+from ..runtime import EstimatorConfig, PolicyConfig, RuntimeConfig
+
+#: valid ``SessionSpec.adaptivity`` values, weakest first
+ADAPTIVITY_LEVELS = ("static", "adaptive", "arbitrated")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Declarative fabric geometry — a :class:`Topology` as a value.
+
+    Mirrors the ``Topology`` constructor one-for-one so specs can live in
+    configs / JSON-ish call sites without importing the core; ``build()``
+    is the only construction path and therefore the single place the
+    session layer turns description into geometry.
+    """
+
+    n_devices: int
+    group_size: int = 4
+    n_pods: int = 1
+    caps: Optional[LinkCaps] = None
+    # (src, dst) -> capacity scale; a mapping or an iterable of pairs
+    link_scale: Union[
+        Mapping[Tuple[int, int], float],
+        Tuple[Tuple[Tuple[int, int], float], ...],
+        None,
+    ] = None
+
+    def build(self) -> Topology:
+        return Topology(
+            self.n_devices,
+            self.group_size,
+            self.n_pods,
+            self.caps,
+            dict(self.link_scale) if self.link_scale else None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionSpec:
+    """One declarative description of a full NIMBLE stack.
+
+    ``topology`` accepts either a :class:`TopologySpec` or an existing
+    :class:`Topology` (callers that already hold one, e.g. benchmarks
+    sweeping a fixed fabric).  ``cost`` accepts a :class:`CostModel`, a
+    mapping of field overrides (``{"relay_cap": 9e10}``), or ``None`` for
+    library defaults.  ``fabric`` lets an arbitrated session *join* an
+    existing :class:`~repro.fabric.FabricArbiter` (multi-session
+    deployments share one ledger); ``None`` makes the session construct
+    and own its own.
+    """
+
+    topology: Union[TopologySpec, Topology]
+    cost: Union[CostModel, Mapping, None] = None
+    adaptivity: str = "static"
+    # -- tenant identity (arbitrated sessions) ---------------------------------
+    tenant: str = "default"
+    qos: str = "standard"
+    weight: float = 1.0
+    admission: Optional[AdmissionConfig] = None
+    # -- component overrides (None = the hand-wired constructor default) -------
+    planner: Optional[PlannerConfig] = None
+    runtime: Optional[RuntimeConfig] = None
+    policy: Optional[PolicyConfig] = None
+    estimator: Optional[EstimatorConfig] = None
+    arbiter: Optional[ArbiterConfig] = None
+    fabric: Optional[object] = None          # shared FabricArbiter to join
+    initial_demand: Optional[object] = None  # [n, n] warm demand matrix
+
+    def __post_init__(self):
+        if self.adaptivity not in ADAPTIVITY_LEVELS:
+            raise ValueError(
+                f"unknown adaptivity {self.adaptivity!r}; "
+                f"one of {ADAPTIVITY_LEVELS}"
+            )
+        if self.qos not in QOS_RANK:
+            raise ValueError(
+                f"unknown qos class {self.qos!r}; one of {sorted(QOS_RANK)}"
+            )
+        if self.weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {self.weight}")
+        if self.runtime is not None and self.planner is not None:
+            raise ValueError(
+                "give the planner config via runtime=RuntimeConfig("
+                "planner=...) when a runtime config is supplied — two "
+                "sources of planner truth would desynchronize plan() and "
+                "the replan loop"
+            )
+        adaptive = self.adaptivity in ("adaptive", "arbitrated")
+        if not adaptive:
+            for field in ("runtime", "policy", "estimator", "initial_demand"):
+                if getattr(self, field) is not None:
+                    raise ValueError(
+                        f"{field!r} requires adaptivity 'adaptive' or "
+                        f"'arbitrated', not {self.adaptivity!r}"
+                    )
+        if self.adaptivity != "arbitrated":
+            if self.fabric is not None or self.arbiter is not None:
+                raise ValueError(
+                    "'fabric'/'arbiter' require adaptivity 'arbitrated'"
+                )
+        if self.fabric is not None and self.arbiter is not None:
+            raise ValueError(
+                "'arbiter' configures a session-owned arbiter; a joined "
+                "'fabric' already has its own config"
+            )
+
+    # -- builders ----------------------------------------------------------------
+    def build_topology(self) -> Topology:
+        if isinstance(self.topology, Topology):
+            return self.topology
+        return self.topology.build()
+
+    def build_cost_model(self) -> Optional[CostModel]:
+        """``None`` means "library defaults" and is passed through as-is,
+        so Session-built components share the exact code paths (and value
+        caches) of hand-wired ones."""
+        if self.cost is None or isinstance(self.cost, CostModel):
+            return self.cost
+        return dataclasses.replace(CostModel(), **dict(self.cost))
+
+    def runtime_config(self) -> Optional[RuntimeConfig]:
+        """Runtime config with a bare ``planner`` override folded in."""
+        if self.runtime is not None:
+            return self.runtime
+        if self.planner is not None:
+            return RuntimeConfig(planner=self.planner)
+        return None
+
+    def tenant_config(self) -> TenantConfig:
+        return TenantConfig(
+            weight=self.weight,
+            qos=self.qos,
+            admission=self.admission or AdmissionConfig(),
+        )

@@ -53,7 +53,7 @@ class ModelConfig:
     head_dim_override: Optional[int] = None
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
-    # which input shapes this arch supports (DESIGN.md §6 skips)
+    # which input shapes this arch supports (DESIGN.md §7 skips)
     skip_shapes: Tuple[str, ...] = ()
 
     @property

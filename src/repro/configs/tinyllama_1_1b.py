@@ -11,5 +11,5 @@ register(ModelConfig(
     d_ff=5632,
     vocab=32000,
     rope_theta=10000.0,
-    window=4096,               # SWA variant for long_500k (DESIGN.md §6)
+    window=4096,               # SWA variant for long_500k (DESIGN.md §7)
 ))

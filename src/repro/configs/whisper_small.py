@@ -3,7 +3,7 @@
 ``input_specs`` provides precomputed frame embeddings [B, 1500, d] (the
 conv frontend output), per the assignment carve-out.  ``long_500k`` is
 skipped: a 30 s-context enc-dec has no 500k-token decode semantics
-(DESIGN.md §6).
+(DESIGN.md §7).
 """
 from .base import ModelConfig, register
 

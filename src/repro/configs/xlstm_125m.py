@@ -1,7 +1,7 @@
 """xLSTM-125M [arXiv:2405.04517] — alternating sLSTM + mLSTM blocks.
 
 Attention-free recurrence: NIMBLE inapplicable (balanced collectives only);
-built without the technique per DESIGN.md §6.  Runs long_500k natively
+built without the technique per DESIGN.md §7.  Runs long_500k natively
 (O(1) state decode).
 """
 from .base import ModelConfig, register

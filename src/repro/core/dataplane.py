@@ -86,12 +86,25 @@ class NimbleAllToAll:
         planner_cfg: Optional[PlannerConfig] = None,
         cost_model: Optional[CostModel] = None,
         mode: str = "nimble",  # nimble | direct | stripe
+        topo: Optional[Topology] = None,
     ):
         if mode not in ("nimble", "direct", "stripe"):
             raise ValueError(f"unknown mode {mode!r}")
         self.axis_name = axis_name
         self.mode = mode
-        self.topo = Topology(n_devices, group_size)
+        # ``topo`` lets a Session (or any caller with a non-default fabric:
+        # custom caps, pods, degraded links) supply the exact Topology the
+        # planner should price; geometry must match the dataplane axis
+        if topo is not None:
+            if (topo.n_devices, topo.group_size) != (n_devices, group_size):
+                raise ValueError(
+                    f"topology geometry ({topo.n_devices}, "
+                    f"{topo.group_size}) != dataplane geometry "
+                    f"({n_devices}, {group_size})"
+                )
+            self.topo = topo
+        else:
+            self.topo = Topology(n_devices, group_size)
         # direct (NCCL/PXN-like) routes everything on k=0, so it provisions
         # no alternate slots — otherwise the dry-run would charge the static
         # baseline NIMBLE's wire padding (EXPERIMENTS.md §Perf fairness note)
@@ -138,6 +151,48 @@ class NimbleAllToAll:
                        if s in slot_set]
                 groups[hop] = ids
             self._round_groups.append(groups)
+
+    @classmethod
+    def from_session(
+        cls,
+        session,
+        axis_name: str,
+        *,
+        max_chunks: int,
+        chunk_bytes: float,
+        alt_frac: float = 0.5,
+        mode: str = "nimble",
+        planner_cfg: Optional[PlannerConfig] = None,
+    ) -> "NimbleAllToAll":
+        """Session-wired endpoint (DESIGN.md §5).
+
+        Topology, cost model, and planner defaults come from the session
+        (duck-typed: ``.topo``, ``.cost_model``, ``.spec.planner``,
+        ``.runtime`` — this module never imports ``repro.api``); when the
+        session runs an orchestration runtime, the endpoint's telemetry is
+        attached so host-driven ``plan_batch`` calls feed its monitor
+        stage.  With an all-default session this is constructor-equivalent
+        to hand-wiring ``NimbleAllToAll(...)`` — bit-identical plans.
+        """
+        topo = session.topo
+        comm = cls(
+            axis_name,
+            topo.n_devices,
+            topo.group_size,
+            max_chunks=max_chunks,
+            chunk_bytes=chunk_bytes,
+            alt_frac=alt_frac,
+            planner_cfg=(
+                planner_cfg if planner_cfg is not None else session.spec.planner
+            ),
+            cost_model=session.cost_model,
+            mode=mode,
+            topo=topo,
+        )
+        runtime = getattr(session, "runtime", None)
+        if runtime is not None:
+            comm.attach_telemetry(runtime.telemetry)
+        return comm
 
     # -- plan -------------------------------------------------------------------
     def _plan(self, demand_chunks: jnp.ndarray) -> jnp.ndarray:

@@ -31,8 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .cost import CostModel
 from .dataplane import NimbleAllToAll
 from .planner import PlannerConfig
+from .topology import Topology
 
 
 @dataclasses.dataclass
@@ -67,12 +69,50 @@ class MoEDispatcher:
 
     def __init__(self, axis_name: str, cfg: MoECommConfig,
                  planner_cfg: Optional[PlannerConfig] = None,
-                 runtime=None):
+                 runtime=None,
+                 cost_model: Optional[CostModel] = None,
+                 topo: Optional[Topology] = None):
         self.axis = axis_name
         self.cfg = cfg
         self._comms = {}
         self._planner_cfg = planner_cfg
         self.runtime = runtime
+        # non-default fabric description for the underlying dataplane
+        # endpoints (Session-supplied; None keeps the historical behavior
+        # of deriving a default Topology from the comm geometry)
+        self._cost_model = cost_model
+        self._topo = topo
+
+    @classmethod
+    def from_session(cls, session, axis_name: str, cfg: MoECommConfig,
+                     planner_cfg: Optional[PlannerConfig] = None
+                     ) -> "MoEDispatcher":
+        """Session-wired dispatcher (DESIGN.md §5).
+
+        The session (duck-typed — this module never imports ``repro.api``)
+        supplies the fabric topology, cost model, planner defaults, and —
+        when it runs one — the orchestration runtime, so expert-parallel
+        dispatch demand feeds the runtime's telemetry/estimator without
+        any per-application ``attach_telemetry`` wiring.  The comm
+        geometry in ``cfg`` must match the session's fabric.
+        """
+        topo = session.topo
+        if (cfg.n_devices, cfg.group_size) != (topo.n_devices,
+                                               topo.group_size):
+            raise ValueError(
+                f"MoE comm geometry ({cfg.n_devices}, {cfg.group_size}) != "
+                f"session fabric ({topo.n_devices}, {topo.group_size})"
+            )
+        return cls(
+            axis_name,
+            cfg,
+            planner_cfg=(
+                planner_cfg if planner_cfg is not None else session.spec.planner
+            ),
+            runtime=getattr(session, "runtime", None),
+            cost_model=session.cost_model,
+            topo=topo,
+        )
 
     # -- static geometry -------------------------------------------------------
     def capacity_tokens(self, n_assign: int) -> int:
@@ -96,7 +136,9 @@ class MoEDispatcher:
                 chunk_bytes=chunk_bytes,
                 alt_frac=self.cfg.alt_frac,
                 planner_cfg=self._planner_cfg,
+                cost_model=self._cost_model,
                 mode=self.cfg.mode,
+                topo=self._topo,
             )
             if self.runtime is not None:
                 comm.attach_telemetry(self.runtime.telemetry)
@@ -156,7 +198,7 @@ class MoEDispatcher:
 
         dest = (expert_idx // cfg.experts_per_device).reshape(A)  # [A]
         if token_valid is not None:
-            # unowned tokens (replicated-token mode, DESIGN.md §7): route to
+            # unowned tokens (replicated-token mode, DESIGN.md §8): route to
             # a sentinel so they never enter any send buffer.
             avalid = jnp.repeat(token_valid, k)
             dest = jnp.where(avalid, dest, n)                      # sentinel

@@ -37,6 +37,7 @@ from ..core.cost import CostModel
 from ..core.mcf import PairKey, Plan, solve_mwu
 from ..core.topology import LinkEventBus, Topology
 from ..jsonio import tag
+from ..runtime.events import PricesMovedHint, merge_overrides
 from .admission import AdmissionConfig, AdmissionDecision, TokenBucket
 from .fairness import fairness_report
 from .state import FabricState
@@ -74,6 +75,10 @@ class TenantConfig:
 @dataclasses.dataclass(frozen=True)
 class ArbiterConfig:
     n_sweeps: int = 3   # max sequential-greedy sweeps per arbitrate() call
+    # publish a "prices moved" hint on the bus when a commit shifts the
+    # total committed load by more than this fraction of the peak load
+    # (the arbiter-aware replan trigger, DESIGN.md §4.3); <= 0 disables
+    price_hint_rel: float = 0.25
 
 
 @dataclasses.dataclass
@@ -84,6 +89,7 @@ class ArbiterStats:
     throttled: int = 0     # gate denials
     broadcasts: int = 0    # link-event batches published
     commits: int = 0       # ledger commits
+    price_hints: int = 0   # "prices moved" hints published
 
     def to_json_obj(self) -> dict:
         return tag("fabric_arbiter_stats", dataclasses.asdict(self))
@@ -112,6 +118,19 @@ class FabricArbiter:
         self._gates: Dict[str, TokenBucket] = {}
         self._runtimes: Dict[str, object] = {}
         self._bus_tokens: Dict[str, int] = {}
+        self._hinted_load: Optional[np.ndarray] = None
+
+    @classmethod
+    def from_session(cls, session) -> "FabricArbiter":
+        """Build the shared arbiter for a :class:`repro.api.Session`.
+
+        Narrow construction hook (DESIGN.md §5): duck-typed on
+        ``session.topo`` / ``session.cost_model`` / ``session.spec.
+        arbiter``, so this module never imports ``repro.api``.  Sessions
+        that *join* an existing fabric pass it via ``SessionSpec.fabric``
+        instead of constructing one here.
+        """
+        return cls(session.topo, session.cost_model, cfg=session.spec.arbiter)
 
     # -- registration -----------------------------------------------------------
     def register(self, name: str, cfg: TenantConfig | None = None) -> str:
@@ -146,9 +165,21 @@ class FabricArbiter:
         self.register(name, cfg)
         runtime.bind_arbiter(self, name)
         self._runtimes[name] = runtime
-        self._bus_tokens[name] = self.bus.subscribe(
-            lambda events, rt=runtime: [rt.events.schedule(e) for e in events]
-        )
+
+        def _deliver(events, rt=runtime, me=name):
+            # one bus, two payload kinds: LinkEvents land in the tenant's
+            # own event log (applied at its window boundaries), while
+            # "prices moved" hints go straight to the fabric-pressure
+            # clock — skipping the committer itself, whose own commit
+            # never moves its own exported prices
+            for ev in events:
+                if isinstance(ev, PricesMovedHint):
+                    if ev.tenant != me:
+                        rt.notify_fabric_pressure()
+                else:
+                    rt.events.schedule(ev)
+
+        self._bus_tokens[name] = self.bus.subscribe(_deliver)
         return name
 
     def unregister(self, name: str) -> None:
@@ -162,6 +193,11 @@ class FabricArbiter:
         token = self._bus_tokens.pop(name, None)
         if token is not None:
             self.bus.unsubscribe(token)
+        # a departing tenant's withdrawn load is a price move for every
+        # survivor — without this, a demand-stable tenant keeps routing
+        # around a peer that is long gone.  ``require_peers=False``: the
+        # hint matters even (especially) when one tenant remains.
+        self._maybe_publish_price_hint(name, require_peers=False)
 
     def tenants(self) -> List[str]:
         return list(self._tenants)
@@ -201,6 +237,41 @@ class FabricArbiter:
             raise KeyError(f"tenant {name!r} not registered")
         self.state.commit(name, resource_bytes)
         self.stats.commits += 1
+        self._maybe_publish_price_hint(name)
+
+    def _maybe_publish_price_hint(
+        self, committer: str, require_peers: bool = True
+    ) -> None:
+        """Publish a :class:`~repro.runtime.events.PricesMovedHint` when
+        the ledger moved materially since the last hint.
+
+        The relative change is measured against the peak committed load
+        (``max`` over both snapshots), so a fabric ramping up from idle
+        registers as a full move while steady-state telemetry jitter stays
+        under the threshold.  With ``require_peers`` (the commit path),
+        solo fabrics never hint — part of the single-tenant zero-overhead
+        contract; withdrawal passes ``False`` because the survivors of a
+        departure must learn about it no matter how few remain.
+        """
+        if self.cfg.price_hint_rel <= 0:
+            return
+        if require_peers and len(self._tenants) < 2:
+            return
+        total = self.state.total_load()
+        last = (
+            self._hinted_load
+            if self._hinted_load is not None
+            else np.zeros_like(total)
+        )
+        scale = max(float(total.max()), float(last.max()))
+        if scale <= 0.0:
+            return
+        rel = float(np.max(np.abs(total - last))) / scale
+        if rel < self.cfg.price_hint_rel:
+            return
+        self._hinted_load = total.copy()
+        self.stats.price_hints += 1
+        self.bus.publish([PricesMovedHint(tenant=committer, rel_change=rel)])
 
     # -- admission --------------------------------------------------------------
     def admit(
@@ -240,8 +311,6 @@ class FabricArbiter:
         (:func:`repro.runtime.events.merge_overrides`), so the two views
         converge once the events fall due.  Returns the listener count.
         """
-        from ..runtime.events import merge_overrides
-
         evs = list(events) if isinstance(events, (list, tuple)) else [events]
         self.state.apply_link_overrides(dict(merge_overrides(evs)))
         self.stats.broadcasts += 1

@@ -2,7 +2,7 @@
 
 Online-softmax blocked attention for the dense architectures' prefill and
 training paths, and — with ``window`` set — the sub-quadratic variant that
-makes ``long_500k`` runnable for full-attention models (DESIGN.md §6).
+makes ``long_500k`` runnable for full-attention models (DESIGN.md §7).
 
 Grid = (batch, heads, q_blocks, kv_blocks); kv is innermost/sequential so the
 running (m, l, acc) statistics live in VMEM scratch across kv steps.  GQA is

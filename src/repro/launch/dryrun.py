@@ -92,7 +92,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         "mode": moe_mode,
     }
     if not model.supports(shape):
-        rec["status"] = "skipped (DESIGN.md §6)"
+        rec["status"] = "skipped (DESIGN.md §7)"
         return rec
     if shape.name == "long_500k" and cfg.arch_type == "audio":
         rec["status"] = "skipped"

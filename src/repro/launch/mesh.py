@@ -3,7 +3,7 @@
 Single pod: (data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16,
 model=16) = 512 chips; the pod axis is pure data parallel (gradient
 all-reduce over DCI), the model axis hosts tensor/expert parallelism and is
-the NIMBLE orchestration axis (DESIGN.md §7).
+the NIMBLE orchestration axis (DESIGN.md §8).
 
 A FUNCTION, not a module constant: importing this module never touches jax
 device state (the dry-run must set XLA_FLAGS before first jax init).

@@ -2,7 +2,7 @@
 
 Pre-norm GQA + SwiGLU blocks, RoPE, optional QKV bias (qwen), optional
 sliding-window attention (the sub-quadratic variant that makes ``long_500k``
-runnable for dense archs — DESIGN.md §6).  Layers are stacked and scanned.
+runnable for dense archs — DESIGN.md §7).  Layers are stacked and scanned.
 """
 
 from __future__ import annotations

@@ -8,7 +8,7 @@ decoder is causal self-attention + cross-attention to the encoder output.
 
 Serving: cross-attention K/V are computed once from the encoder output and
 held in the cache alongside the self-attention ring cache.  ``long_500k``
-is skipped for this arch (30 s context enc-dec; DESIGN.md §6).
+is skipped for this arch (30 s context enc-dec; DESIGN.md §7).
 """
 
 from __future__ import annotations

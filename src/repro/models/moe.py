@@ -124,7 +124,12 @@ def make_moe_ffn(cfg: ModelConfig, ctx: ParallelContext):
         mode=ctx.moe_mode,
         payload_dtype=ctx.compute_dtype,
     )
-    dispatcher = MoEDispatcher(ctx.model_axis, comm_cfg)
+    if ctx.session is not None:
+        # endpoint API: the session supplies cost model, planner config,
+        # and (when adaptive) runtime telemetry wiring — see DESIGN.md §5
+        dispatcher = ctx.session.moe_dispatcher(ctx.model_axis, comm_cfg)
+    else:
+        dispatcher = MoEDispatcher(ctx.model_axis, comm_cfg)
     from jax.sharding import PartitionSpec as P
 
     expert_spec = P(ctx.model_axis, None, None)
@@ -142,7 +147,7 @@ def make_moe_ffn(cfg: ModelConfig, ctx: ParallelContext):
         """Tokens replicated over the model axis (small decode batches):
         each model device owns a disjoint round-robin slice, routes only
         owned tokens, and the owned outputs are merged with a psum
-        (DESIGN.md §7)."""
+        (DESIGN.md §8)."""
         pp = {"wg": wg, "wu": wu, "wd": wd}
         me = jax.lax.axis_index(ctx.model_axis)
         T = xf.shape[0]

@@ -12,7 +12,7 @@ which is what qualifies the hybrid/SSM archs for ``long_500k``.  Decode is
 the O(1) recurrent update on a carried state.
 
 NIMBLE applicability: none — the recurrence is sequence-local and the only
-collectives are balanced TP/DP (DESIGN.md §6).
+collectives are balanced TP/DP (DESIGN.md §7).
 """
 
 from __future__ import annotations

@@ -17,7 +17,7 @@ sub-quadratic in sequence length, which is what runs ``long_500k``.  The
 chunkwise-parallel mLSTM (TFLA-style) is a §Perf candidate, not required
 for correctness.
 
-Attention-free: NIMBLE inapplicable (DESIGN.md §6); built without.
+Attention-free: NIMBLE inapplicable (DESIGN.md §7); built without.
 """
 
 from __future__ import annotations

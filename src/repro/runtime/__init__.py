@@ -24,6 +24,7 @@ from .estimator import DemandEstimator, EstimatorConfig
 from .events import (
     EventLog,
     LinkEvent,
+    PricesMovedHint,
     link_degraded,
     link_down,
     link_restored,
@@ -47,6 +48,7 @@ __all__ = [
     "EstimatorConfig",
     "EventLog",
     "LinkEvent",
+    "PricesMovedHint",
     "link_degraded",
     "link_down",
     "link_restored",

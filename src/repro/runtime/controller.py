@@ -191,6 +191,11 @@ class WindowReport:
     replan_reason: str
     cache_hit: bool
     events: Tuple[str, ...]
+    # the policy's raw trigger before fabric-gate rewriting: a window with
+    # ``replan_reason="gated"`` keeps its underlying trigger ("congestion",
+    # "staleness", "fabric") here, so report consumers can tell a gated
+    # trigger from a window where no trigger fired at all
+    trigger_reason: str = "none"
 
     def to_json_obj(self) -> dict:
         return tag("runtime_window", dataclasses.asdict(self))
@@ -228,6 +233,11 @@ class TraceResult:
             return 0.0
         return len(self.replan_windows) / len(self.reports)
 
+    @property
+    def gated_windows(self) -> List[int]:
+        """Windows whose fired trigger was throttled by the fabric gate."""
+        return [r.window for r in self.reports if r.replan_reason == "gated"]
+
     def to_json_obj(self) -> dict:
         return tag(
             "runtime_trace",
@@ -235,6 +245,7 @@ class TraceResult:
                 "total_completion_s": self.total_completion_s,
                 "replan_windows": self.replan_windows,
                 "replan_fraction": self.replan_fraction,
+                "gated_windows": self.gated_windows,
                 "stats": self.stats.to_json_obj(),
                 "windows": [r.to_json_obj() for r in self.reports],
             },
@@ -243,6 +254,36 @@ class TraceResult:
 
 class OrchestrationRuntime:
     """Endpoint-driven monitor -> estimate -> replan -> swap loop."""
+
+    @classmethod
+    def from_session(cls, session) -> "OrchestrationRuntime":
+        """Build the runtime for a :class:`repro.api.Session`.
+
+        Narrow construction hook (DESIGN.md §5): the session is duck-typed
+        — only ``.topo``, ``.cost_model``, and ``.spec`` (with
+        ``runtime_config()``, ``policy``, ``estimator``,
+        ``initial_demand``) are read — so this module never imports
+        ``repro.api``.  ``None`` spec fields fall through to the exact
+        constructor defaults, keeping Session-built runtimes bit-identical
+        to hand-wired ``OrchestrationRuntime(topo)`` stacks.
+        """
+        spec = session.spec
+        policy = (
+            ReplanPolicy(spec.policy) if spec.policy is not None else None
+        )
+        estimator = (
+            DemandEstimator(session.topo.n_devices, spec.estimator)
+            if spec.estimator is not None
+            else None
+        )
+        return cls(
+            session.topo,
+            session.cost_model,
+            cfg=spec.runtime_config(),
+            policy=policy,
+            estimator=estimator,
+            initial_demand=spec.initial_demand,
+        )
 
     def __init__(
         self,
@@ -446,10 +487,14 @@ class OrchestrationRuntime:
     def _maybe_swap(self, window: int) -> bool:
         """Atomic plan swap at the window boundary (never mid-round)."""
         if self._pending is not None and self._pending[1] <= window:
-            self._active = self._pending[0]
+            handle = self._pending[0]
+            self._active = handle
             self._pending = None
             self.stats.swaps += 1
-            self.policy.notify_swap()
+            # pass the solve provenance: a fabric-pressure hint newer than
+            # the swapped plan's solve must survive the swap (the plan was
+            # priced before the fabric shifted)
+            self.policy.notify_swap(handle.solved_window)
             return True
         return False
 
@@ -499,6 +544,7 @@ class OrchestrationRuntime:
             pending=self._pending is not None,
             topology_event=bool(due),
         )
+        trigger_reason = decision.reason
         if (
             decision.replan
             and self._arbiter is not None
@@ -517,6 +563,11 @@ class OrchestrationRuntime:
                 # the fired trigger disarmed the policy but no swap will
                 # follow — re-arm so the tenant retries once tokens refill
                 self.policy.notify_gated()
+                if trigger_reason == "fabric":
+                    # the pressure that fired was not relieved (no solve
+                    # happened) — restart the soft deadline so the tenant
+                    # retries once its tokens refill
+                    self.policy.notify_fabric_pressure(w)
         cache_hit = False
         if decision.replan:
             _, cache_hit = self._issue_replan(predicted, w)
@@ -537,6 +588,7 @@ class OrchestrationRuntime:
             replan_reason=decision.reason,
             cache_hit=cache_hit,
             events=tuple(ev.describe() for ev in due),
+            trigger_reason=trigger_reason,
         )
 
     def run_trace(
@@ -554,6 +606,17 @@ class OrchestrationRuntime:
                 self.events.schedule(ev)
         reports = [self.step(trace[w]) for w in range(len(trace))]
         return TraceResult(reports, dataclasses.replace(self.stats))
+
+    # -- fabric-pressure hook ---------------------------------------------------
+    def notify_fabric_pressure(self) -> None:
+        """A fabric "prices moved" hint arrived (arbiter broadcast).
+
+        Peers' committed load shifted materially, so the active plan may
+        be priced stale even while this tenant's own demand is flat.
+        Forwarded to the policy's soft staleness clock; a no-op unless
+        ``PolicyConfig.fabric_staleness`` is set.
+        """
+        self.policy.notify_fabric_pressure(self._window)
 
     # -- dataplane / dispatcher hook --------------------------------------------
     def observe_dispatch(self, demand_bytes: np.ndarray) -> None:
@@ -668,6 +731,7 @@ def run_oracle(
                 replan_reason="oracle",
                 cache_hit=False,
                 events=(),
+                trigger_reason="oracle",
             )
         )
     stats = RuntimeStats(

@@ -57,6 +57,27 @@ def link_restored(window: int, src: int, dst: int) -> LinkEvent:
     return LinkEvent(window, src, dst, 1.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class PricesMovedHint:
+    """Fabric-pressure broadcast: the shared ledger moved materially.
+
+    Published by the fabric arbiter on the shared
+    :class:`~repro.core.topology.LinkEventBus` (next to the
+    :class:`LinkEvent` batches it already carries) when a tenant commit
+    shifts the total committed load by more than the arbiter's
+    ``price_hint_rel`` threshold.  ``tenant`` names the committer whose
+    load moved — its *own* runtime skips the hint on delivery, because a
+    tenant's own commit never changes its own exported prices.  Receiving
+    runtimes forward it to ``ReplanPolicy.notify_fabric_pressure``, which
+    treats it as a soft staleness deadline (``PolicyConfig.
+    fabric_staleness``): a demand-stable tenant still re-prices a fabric
+    that shifted under it.
+    """
+
+    tenant: str
+    rel_change: float
+
+
 def merge_overrides(events: Iterable[LinkEvent]
                     ) -> List[Tuple[Tuple[int, int], float]]:
     """(endpoints, scale) pairs for a batch of events (last one wins).

@@ -24,10 +24,16 @@ Hysteresis has three guards:
     a replan is being absorbed);
   * **cooldown** — a minimum number of windows between triggers.
 
-Two triggers bypass the congestion hysteresis: a **staleness deadline**
+Three triggers bypass the congestion hysteresis: a **staleness deadline**
 (optional: plans older than ``max_staleness`` windows replan regardless,
-for deployments whose drift is slow but unbounded) and **topology events**
-(link down/degraded — always replan, immediately).
+for deployments whose drift is slow but unbounded), **topology events**
+(link down/degraded — always replan, immediately), and **fabric
+pressure** (optional: a "prices moved" hint from the fabric arbiter —
+peers' committed load shifted materially — is treated as a *soft
+staleness deadline*: within ``fabric_staleness`` windows of the hint the
+tenant replans with ``reason="fabric"`` even if its own demand is
+perfectly stable, so it re-prices the fabric it actually shares; see
+``FabricArbiter`` price hints, DESIGN.md §4.3).
 """
 
 from __future__ import annotations
@@ -43,14 +49,18 @@ class PolicyConfig:
     patience: int = 1             # consecutive breaching windows to fire
     cooldown_windows: int = 2     # min windows between congestion triggers
     max_staleness: Optional[int] = None  # windows; None = no deadline
+    # windows between a fabric "prices moved" hint and a forced replan
+    # (soft staleness deadline); None disables the fabric-pressure trigger
+    fabric_staleness: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class ReplanDecision:
     replan: bool
-    # "topology" | "congestion" | "staleness" | "none"; an arbitrated
-    # controller may rewrite a positive decision to replan=False with
-    # reason "gated" when the fabric admission gate throttles the tenant
+    # "topology" | "congestion" | "staleness" | "fabric" | "none"; an
+    # arbitrated controller may rewrite a positive decision to
+    # replan=False with reason "gated" when the fabric admission gate
+    # throttles the tenant
     reason: str
     ratio: float
     threshold: float
@@ -64,6 +74,7 @@ class ReplanPolicy:
         self._breach = 0
         self._armed = True
         self._last_trigger: Optional[int] = None
+        self._pressure_window: Optional[int] = None
 
     def decide(
         self,
@@ -94,6 +105,16 @@ class ReplanPolicy:
         if cfg.max_staleness is not None and plan_age >= cfg.max_staleness:
             self._fired(window)
             return ReplanDecision(True, "staleness", ratio, threshold)
+        if (
+            cfg.fabric_staleness is not None
+            and self._pressure_window is not None
+            and window - self._pressure_window >= cfg.fabric_staleness
+        ):
+            # fabric pressure: peers' prices moved while this tenant's own
+            # demand stayed flat — re-price even though nothing congested
+            self._pressure_window = None
+            self._fired(window)
+            return ReplanDecision(True, "fabric", ratio, threshold)
 
         # congestion trigger with hysteresis
         if not self._armed and ratio < baseline_ratio * cfg.rearm_factor:
@@ -117,7 +138,7 @@ class ReplanPolicy:
         self._breach = 0
         self._last_trigger = window
 
-    def notify_swap(self) -> None:
+    def notify_swap(self, solved_window: Optional[int] = None) -> None:
         """Re-arm when a new plan becomes active.
 
         Disarming exists to stop re-fire storms *while the triggering
@@ -125,9 +146,22 @@ class ReplanPolicy:
         against its own baseline from a clean state.  Without this, a plan
         solved on transitional (mid-drift) demand whose ratio never falls
         below the re-arm watermark would pin the policy disarmed forever.
+
+        A swap also satisfies a pending fabric-pressure deadline — but
+        only one the incoming plan could actually have seen: the plan was
+        priced at ``solved_window``, so a hint that arrived *after* the
+        solve was issued describes a fabric shift the plan missed, and its
+        clock must keep running.  ``solved_window=None`` (callers without
+        solve provenance) conservatively clears.
         """
         self._armed = True
         self._breach = 0
+        if (
+            solved_window is None
+            or self._pressure_window is None
+            or self._pressure_window <= solved_window
+        ):
+            self._pressure_window = None
 
     def notify_gated(self) -> None:
         """Re-arm when the fabric admission gate cancels a fired trigger.
@@ -142,6 +176,19 @@ class ReplanPolicy:
         """
         self._armed = True
         self._breach = 0
+
+    def notify_fabric_pressure(self, window: int) -> None:
+        """Start (or keep) the soft fabric-staleness clock at ``window``.
+
+        Called by the controller when a :class:`~repro.runtime.events.
+        PricesMovedHint` arrives from the fabric arbiter.  The earliest
+        hint wins — repeated hints while the deadline is already running
+        must not push it out, or a chatty fabric would starve the trigger.
+        No-op unless ``PolicyConfig.fabric_staleness`` is set (the default
+        keeps arbitrated runtimes byte-identical to pre-hint behavior).
+        """
+        if self._pressure_window is None:
+            self._pressure_window = window
 
 
 class NeverReplan(ReplanPolicy):

@@ -3,7 +3,7 @@
 Carries the mesh + axis roles so model code stays declarative:
 
   * ``data_axes`` — axes sharding batch/tokens (includes "pod": the pod axis
-    is pure data-parallel, DESIGN.md §7);
+    is pure data-parallel, DESIGN.md §8);
   * ``model_axis`` — tensor/expert-parallel axis; this is also the NIMBLE
     orchestration axis (the paper's technique rides the EP all-to-all);
   * ``ep_size``/``moe_mode``/``group_size`` — expert-parallel group geometry
@@ -34,6 +34,10 @@ class ParallelContext:
     param_dtype: jnp.dtype = jnp.float32
     compute_dtype: jnp.dtype = jnp.float32
     remat: bool = False                    # activation checkpoint per block
+    # optional repro.api.Session supplying ready-wired MoE dispatchers
+    # (cost model, planner config, runtime telemetry); None keeps the
+    # historical hand-wired MoEDispatcher construction (DESIGN.md §5)
+    session: Optional[object] = None
 
     @property
     def token_axes(self) -> Tuple[str, ...]:

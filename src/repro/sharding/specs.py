@@ -6,7 +6,7 @@ whose size is smaller than its assigned axis falls back to replication (so
 reduced smoke configs and ragged dims never fault).
 
 The "pod" axis never appears in param specs — pods are pure data-parallel
-replicas (DESIGN.md §7): parameters are replicated across pods and gradient
+replicas (DESIGN.md §8): parameters are replicated across pods and gradient
 all-reduce crosses the DCI, which is the balanced-collective regime the
 paper leaves to stock ring/tree (§IV-E).
 """

@@ -287,10 +287,153 @@ def test_runtime_gated_replans(topo):
     reasons = [r.replan_reason for r in res.reports]
     assert "gated" in reasons, f"expected throttled replans, got {reasons}"
     assert arb.stats.throttled > 0
-    # gated windows never issued a replan
+    # gated windows never issued a replan, but expose the trigger that
+    # fired — a report consumer can tell "gated" from "no trigger"
     for r in res.reports:
         if r.replan_reason == "gated":
             assert not r.replan_issued
+            assert r.trigger_reason in ("congestion", "staleness", "fabric")
+        elif not r.replan_issued:
+            assert r.trigger_reason == "none"
+        else:
+            assert r.trigger_reason == r.replan_reason
+    assert res.gated_windows == [
+        r.window for r in res.reports if r.replan_reason == "gated"
+    ]
+    assert res.to_json_obj()["gated_windows"] == res.gated_windows
+
+
+# -- prices-moved hints / fabric-pressure trigger --------------------------------
+
+def test_price_hint_published_on_material_commit(topo, cm):
+    from repro.runtime import PricesMovedHint
+
+    arb = FabricArbiter(topo, cm)
+    arb.register("a")
+    seen = []
+    arb.bus.subscribe(lambda evs: seen.extend(evs))
+
+    bg = solve_direct(topo, elephant_demand(256.0), cm)
+    # solo fabric: never hints (zero-overhead contract)
+    arb.commit("a", bg.resource_bytes)
+    assert seen == [] and arb.stats.price_hints == 0
+
+    arb.register("b")
+    arb.commit("b", bg.resource_bytes)
+    assert len(seen) == 1 and isinstance(seen[0], PricesMovedHint)
+    assert seen[0].tenant == "b"
+    assert seen[0].rel_change >= arb.cfg.price_hint_rel
+    # sub-threshold wiggle: no new hint
+    arb.commit("b", bg.resource_bytes * 1.01)
+    assert len(seen) == 1
+    # material move: hints again
+    arb.commit("b", bg.resource_bytes * 3.0)
+    assert len(seen) == 2
+    assert arb.stats.price_hints == 2
+
+
+def test_price_hint_disabled(topo, cm):
+    from repro.fabric import ArbiterConfig
+
+    arb = FabricArbiter(topo, cm, cfg=ArbiterConfig(price_hint_rel=0.0))
+    arb.register("a")
+    arb.register("b")
+    seen = []
+    arb.bus.subscribe(lambda evs: seen.extend(evs))
+    bg = solve_direct(topo, elephant_demand(256.0), cm)
+    arb.commit("b", bg.resource_bytes)
+    assert seen == [] and arb.stats.price_hints == 0
+
+
+def test_policy_fabric_pressure_soft_deadline():
+    pol = ReplanPolicy(PolicyConfig(fabric_staleness=2))
+    kw = dict(ratio=1.0, baseline_ratio=1.0, plan_age=0, pending=False)
+    # no pressure -> stable tenant never fires
+    assert not pol.decide(window=0, **kw).replan
+    pol.notify_fabric_pressure(1)
+    # a later hint must not push the deadline out
+    pol.notify_fabric_pressure(2)
+    assert not pol.decide(window=2, **kw).replan      # 2 - 1 < 2
+    d = pol.decide(window=3, **kw)
+    assert d.replan and d.reason == "fabric"
+    # one-shot: the clock cleared on firing
+    assert not pol.decide(window=4, **kw).replan
+    # a swap also satisfies a pending deadline
+    pol.notify_fabric_pressure(5)
+    pol.notify_swap()
+    assert not pol.decide(window=9, **kw).replan
+
+
+def test_withdrawal_publishes_price_hint(topo, cm):
+    """A departing tenant's withdrawn load is a price move survivors must
+    learn about — even when only one tenant remains."""
+    from repro.runtime import PricesMovedHint
+
+    arb = FabricArbiter(topo, cm)
+    arb.register("a")
+    arb.register("b")
+    bg = solve_direct(topo, elephant_demand(256.0), cm)
+    arb.commit("a", bg.resource_bytes)
+    arb.commit("b", bg.resource_bytes)
+    seen = []
+    arb.bus.subscribe(lambda evs: seen.extend(evs))
+    arb.unregister("b")
+    hints = [e for e in seen if isinstance(e, PricesMovedHint)]
+    assert len(hints) == 1 and hints[0].tenant == "b"
+
+
+def test_swap_keeps_post_solve_pressure_hint():
+    """A hint that arrives after a pending replan was issued describes a
+    shift the swapped plan never saw — its clock survives the swap."""
+    pol = ReplanPolicy(PolicyConfig(fabric_staleness=2))
+    kw = dict(ratio=1.0, baseline_ratio=1.0, plan_age=0, pending=False)
+    # hint at w6, but the swapped plan was solved at w5 -> keep the clock
+    pol.notify_fabric_pressure(6)
+    pol.notify_swap(solved_window=5)
+    d = pol.decide(window=8, **kw)
+    assert d.replan and d.reason == "fabric"
+    # hint at w6, plan solved at w7 (saw the shift) -> clock cleared
+    pol.notify_fabric_pressure(6)
+    pol.notify_swap(solved_window=7)
+    assert not pol.decide(window=20, **kw).replan
+
+
+def test_policy_fabric_pressure_requires_config():
+    pol = ReplanPolicy()  # fabric_staleness=None
+    pol.notify_fabric_pressure(0)
+    d = pol.decide(window=50, ratio=1.0, baseline_ratio=1.0, plan_age=50,
+                   pending=False)
+    assert not d.replan
+
+
+def test_stable_tenant_picks_up_fabric_shift(topo):
+    """ROADMAP acceptance: a tenant whose own demand is stable replans
+    (reason="fabric") when a peer's committed load shifts under it, and
+    the re-priced plan routes around the shift."""
+    from repro.runtime import balanced_trace
+
+    windows = 10
+    trace = balanced_trace(N, windows)
+    arb = FabricArbiter(topo)
+    rt = OrchestrationRuntime(
+        topo, policy=ReplanPolicy(PolicyConfig(fabric_staleness=2))
+    )
+    arb.register_runtime("stable", rt)
+    arb.register("peer")
+
+    reports = []
+    for w in range(windows):
+        if w == 3:
+            bg = solve_direct(topo, elephant_demand(512.0))
+            arb.commit("peer", bg.resource_bytes)
+        reports.append(rt.step(trace[w]))
+    reasons = [r.replan_reason for r in reports]
+    assert "fabric" in reasons, reasons
+    fired = reasons.index("fabric")
+    assert fired >= 5, "soft deadline fired before fabric_staleness elapsed"
+    assert all(r == "none" for r in reasons[:3]), "replanned before the shift"
+    # the re-priced plan lands at a later boundary
+    assert any(r.swapped for r in reports[fired + 1:])
 
 
 # -- event broadcast -------------------------------------------------------------

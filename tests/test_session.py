@@ -1,0 +1,386 @@
+"""Session facade: bit-exactness vs hand-wired stacks + lifecycle (ISSUE 4).
+
+The acceptance contract: a ``Session``-constructed stack produces
+byte-identical plans and identical ``WindowReport`` streams to the manual
+``Topology`` + ``OrchestrationRuntime`` + ``FabricArbiter`` wiring it
+replaces — for static, adaptive, and arbitrated configurations — plus
+lifecycle (teardown releases the ledger and bus) and report schemas.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import Session, SessionSpec, TopologySpec
+from repro.core.dataplane import NimbleAllToAll
+from repro.core.mcf import solve_direct, solve_mwu, solve_static_striping
+from repro.core.moe_comm import MoECommConfig, MoEDispatcher
+from repro.core.topology import Topology
+from repro.fabric import FabricArbiter
+from repro.runtime import (
+    OrchestrationRuntime,
+    PolicyConfig,
+    balanced_trace,
+    drifting_skew_trace,
+    run_static,
+)
+
+MB = float(1 << 20)
+N = 8
+G = 4
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return Topology(N, group_size=G)
+
+
+def skew_demand(bytes_per_src=64 * MB, hot=0, hot_frac=0.7):
+    return {
+        (s, d): bytes_per_src * (
+            hot_frac if d == hot else (1.0 - hot_frac) / (N - 2)
+        )
+        for s in range(N)
+        for d in range(N)
+        if s != d
+    }
+
+
+def elephant(topo, mb=128.0, rails=(0, 1)):
+    D = {}
+    for r in rails:
+        D[(r, r + G)] = mb * MB
+        D[(r + G, r)] = mb * MB
+    return solve_direct(topo, D)
+
+
+def assert_plans_identical(a, b):
+    assert np.array_equal(a.resource_bytes, b.resource_bytes)
+    assert np.array_equal(a.link_bytes, b.link_bytes)
+    assert a.per_pair_bytes() == b.per_pair_bytes()
+
+
+def assert_reports_identical(a, b):
+    assert len(a.reports) == len(b.reports)
+    for ra, rb in zip(a.reports, b.reports):
+        assert ra == rb, f"window {ra.window} diverged:\n{ra}\n{rb}"
+    assert dataclasses.asdict(a.stats) == dataclasses.asdict(b.stats)
+
+
+# -- spec ------------------------------------------------------------------------
+
+def test_topology_spec_builds_identical(topo):
+    built = TopologySpec(N, group_size=G).build()
+    assert built.fingerprint == topo.fingerprint
+
+
+def test_spec_validation():
+    ts = TopologySpec(N, group_size=G)
+    with pytest.raises(ValueError, match="adaptivity"):
+        SessionSpec(topology=ts, adaptivity="warp")
+    with pytest.raises(ValueError, match="weight"):
+        SessionSpec(topology=ts, weight=0.0)
+    with pytest.raises(ValueError, match="qos"):
+        SessionSpec(topology=ts, qos="platinum")
+    # static sessions cannot carry runtime-only or fabric-only fields
+    from repro.runtime import RuntimeConfig
+    with pytest.raises(ValueError, match="adaptive"):
+        SessionSpec(topology=ts, runtime=RuntimeConfig())
+    with pytest.raises(ValueError, match="arbitrated"):
+        SessionSpec(topology=ts, adaptivity="adaptive",
+                    fabric=FabricArbiter(Topology(N, G)))
+    # two sources of planner truth rejected
+    from repro.core.planner import PlannerConfig
+    with pytest.raises(ValueError, match="planner"):
+        SessionSpec(topology=ts, adaptivity="adaptive",
+                    runtime=RuntimeConfig(), planner=PlannerConfig())
+
+
+def test_cost_overrides_applied():
+    spec = SessionSpec(topology=TopologySpec(N, group_size=G),
+                       cost={"relay_cap": 50e9})
+    cm = spec.build_cost_model()
+    assert cm.relay_cap == 50e9
+    # untouched knobs keep library defaults
+    from repro.core.cost import CostModel
+    assert cm.inject_cap == CostModel().inject_cap
+
+
+# -- static: bit-identical host plans --------------------------------------------
+
+def test_static_plans_bit_identical(topo):
+    D = skew_demand()
+    refs = {
+        "nimble": solve_mwu(topo, D),
+        "direct": solve_direct(topo, D),
+        "stripe": solve_static_striping(topo, D),
+    }
+    with Session(SessionSpec(topology=TopologySpec(N, group_size=G))) as sess:
+        for mode, ref in refs.items():
+            assert_plans_identical(sess.plan(D, mode=mode), ref)
+        # array demand == dict demand
+        Dm = np.zeros((N, N))
+        for (s, d), v in D.items():
+            Dm[s, d] = v
+        assert_plans_identical(sess.plan(Dm), refs["nimble"])
+
+
+def test_static_run_trace_matches_run_static(topo):
+    trace = drifting_skew_trace(N, 8, dwell=4)
+    ref = run_static(topo, trace)
+    with Session(SessionSpec(topology=topo)) as sess:
+        got = sess.run_trace(trace)
+    assert_reports_identical(ref, got)
+
+
+# -- adaptive: identical WindowReport streams ------------------------------------
+
+def test_adaptive_bit_identical_vs_handwired(topo):
+    trace = drifting_skew_trace(N, 24, dwell=8)
+    ref = OrchestrationRuntime(topo).run_trace(trace)
+    with Session(SessionSpec(topology=topo, adaptivity="adaptive")) as sess:
+        got = sess.run_trace(trace)
+    assert_reports_identical(ref, got)
+
+
+# -- arbitrated: identical reports AND fairness ----------------------------------
+
+def test_arbitrated_bit_identical_vs_handwired(topo):
+    trace = drifting_skew_trace(N, 20, dwell=6)
+    bg = elephant(topo)
+
+    rt = OrchestrationRuntime(topo)
+    arb = FabricArbiter(topo)
+    arb.register_runtime("skew", rt)
+    arb.register("bg")
+    arb.commit("bg", bg.resource_bytes)
+    ref = rt.run_trace(trace)
+    ref_fairness = arb.fairness_report()
+
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="skew")
+    with Session(spec) as sess:
+        sess.join_static_tenant("bg", bg)
+        got = sess.run_trace(trace)
+        got_fairness = sess.fabric.fairness_report()
+
+    assert_reports_identical(ref, got)
+    assert ref_fairness == got_fairness
+
+
+def test_arbitrated_plan_prices_match_handwired(topo):
+    D = skew_demand()
+    bg = elephant(topo)
+
+    arb = FabricArbiter(topo)
+    arb.register("job")
+    arb.register("bg")
+    arb.commit("bg", bg.resource_bytes)
+    ref = solve_mwu(topo, D, ext_loads=arb.prices_for("job"))
+
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="job")
+    with Session(spec) as sess:
+        sess.join_static_tenant("bg", bg)
+        assert_plans_identical(sess.plan(D), ref)
+        # the arbitrated nimble solve committed the tenant's load
+        assert set(sess.fabric.state.tenants()) == {"bg", "job"}
+        # baselines never commit
+        sess.plan(D, mode="direct")
+        assert np.array_equal(
+            sess.fabric.state.committed_load("job"), ref.resource_bytes
+        )
+
+
+# -- endpoints -------------------------------------------------------------------
+
+def test_all_to_all_plan_batch_bit_identical(topo):
+    rng = np.random.default_rng(0)
+    demand = rng.integers(0, 16, size=(2, N, N)).astype(np.int32)
+    for b in range(2):
+        np.fill_diagonal(demand[b], 0)
+    ref = NimbleAllToAll("x", N, G, max_chunks=16, chunk_bytes=1024.0)
+    with Session(SessionSpec(topology=topo)) as sess:
+        comm = sess.all_to_all("x", max_chunks=16, chunk_bytes=1024.0)
+        # endpoint cache: same arguments, same instance
+        assert comm is sess.all_to_all("x", max_chunks=16, chunk_bytes=1024.0)
+        got = comm.plan_batch(demand)
+    assert np.array_equal(np.asarray(ref.plan_batch(demand)),
+                          np.asarray(got))
+
+
+def test_all_to_all_telemetry_autowired(topo):
+    demand = np.full((1, N, N), 4, dtype=np.int32)
+    np.fill_diagonal(demand[0], 0)
+    with Session(SessionSpec(topology=topo, adaptivity="adaptive")) as sess:
+        comm = sess.all_to_all("x", max_chunks=8, chunk_bytes=1024.0)
+        assert comm.telemetry is sess.runtime.telemetry
+        comm.plan_batch(demand)
+        assert len(sess.runtime.telemetry) == 1
+
+
+def test_moe_dispatcher_from_session(topo):
+    cfg = MoECommConfig(n_devices=N, n_experts=8, d_model=16, group_size=G)
+    ref = MoEDispatcher("x", cfg)
+    with Session(SessionSpec(topology=topo, adaptivity="adaptive")) as sess:
+        disp = sess.moe_dispatcher("x", cfg)
+        assert disp.runtime is sess.runtime
+        rng = np.random.default_rng(1)
+        demand = rng.integers(0, 4, size=(1, N, N)).astype(np.int32)
+        np.fill_diagonal(demand[0], 0)
+        got = disp.plan_batched(demand, n_assign=64)
+        # dispatch demand reached the runtime's estimator
+        assert sess.runtime.estimator.predict().sum() > 0
+    assert np.array_equal(
+        np.asarray(ref.plan_batched(demand, n_assign=64)), np.asarray(got)
+    )
+    # geometry mismatch rejected
+    bad = MoECommConfig(n_devices=4, n_experts=8, d_model=16, group_size=2)
+    with Session(SessionSpec(topology=topo)) as sess:
+        with pytest.raises(ValueError, match="geometry"):
+            sess.moe_dispatcher("x", bad)
+
+
+# -- lifecycle -------------------------------------------------------------------
+
+def test_context_manager_teardown_releases_fabric(topo):
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="t")
+    with Session(spec) as sess:
+        arb = sess.fabric
+        sess.step(balanced_trace(N, 1)[0])
+        assert arb.tenants() == ["t"]
+        assert len(arb.bus) == 1
+        assert arb.state.tenants() == ["t"]
+    assert sess.state == "closed"
+    assert arb.tenants() == []          # tenant unregistered
+    assert arb.state.tenants() == []    # ledger share withdrawn
+    assert len(arb.bus) == 0            # bus unsubscribed
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.plan(skew_demand())
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.step(balanced_trace(N, 1)[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.report()
+    sess.close()  # idempotent
+
+
+def test_two_sessions_share_one_fabric(topo):
+    spec_a = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="a")
+    with Session(spec_a) as sa:
+        spec_b = SessionSpec(
+            topology=topo, adaptivity="arbitrated", tenant="b",
+            fabric=sa.fabric,
+        )
+        with Session(spec_b) as sb:
+            assert sb.fabric is sa.fabric
+            assert sa.fabric.tenant_order() == ["a", "b"]
+            sa.step(balanced_trace(N, 1)[0])
+            sb.step(balanced_trace(N, 1)[0])
+            # both tenants' executed loads share the ledger
+            assert set(sa.fabric.state.tenants()) == {"a", "b"}
+        # closing b releases only b
+        assert sa.fabric.tenants() == ["a"]
+        assert sa.fabric.state.tenants() == ["a"]
+
+
+def test_join_static_tenant_atomic(topo):
+    """A rejected commit must not leave a registered zero-load ghost."""
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="t")
+    with Session(spec) as sess:
+        with pytest.raises(ValueError, match="shape"):
+            sess.join_static_tenant("bg", np.zeros(3))
+        assert sess.fabric.tenants() == ["t"]
+        # corrected retry succeeds
+        sess.join_static_tenant("bg", elephant(topo))
+        assert set(sess.fabric.tenants()) == {"t", "bg"}
+
+
+def test_plan_threads_spec_planner(topo):
+    """Session.plan honors the spec's planner knobs — one planner truth
+    for host plans and the runtime's replan solves."""
+    from repro.core.planner import PlannerConfig
+    from repro.runtime import RuntimeConfig
+
+    D = skew_demand()
+    pcfg = PlannerConfig(lam=0.5, chunk_bytes=2.0 * MB)
+    ref = solve_mwu(topo, D, lam=0.5, eps=2.0 * MB)
+    spec = SessionSpec(topology=topo, adaptivity="adaptive",
+                       runtime=RuntimeConfig(planner=pcfg))
+    with Session(spec) as sess:
+        assert_plans_identical(sess.plan(D), ref)
+    # and the default spec still takes solve_mwu's exact default path
+    with Session(SessionSpec(topology=topo)) as sess:
+        assert_plans_identical(sess.plan(D), solve_mwu(topo, D))
+
+
+def test_static_session_rejects_runtime_calls(topo):
+    with Session(SessionSpec(topology=topo)) as sess:
+        with pytest.raises(RuntimeError, match="adaptive"):
+            sess.step(balanced_trace(N, 1)[0])
+        with pytest.raises(RuntimeError, match="arbitrated"):
+            sess.join_static_tenant("bg", np.zeros(1))
+        with pytest.raises(RuntimeError, match="arbitrated"):
+            sess.plan(skew_demand(), commit=True)
+
+
+# -- report ----------------------------------------------------------------------
+
+def test_report_embeds_known_schemas(topo):
+    from repro.jsonio import json_dumps, json_loads, schema_kind
+
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="r")
+    with Session(spec) as sess:
+        sess.join_static_tenant("bg", elephant(topo))
+        sess.run_trace(drifting_skew_trace(N, 4, dwell=2))
+        rec = sess.report()
+    assert schema_kind(rec) == "session"
+    assert schema_kind(rec["runtime_stats"]) == "runtime_stats"
+    assert schema_kind(rec["telemetry"]) == "telemetry_aggregate"
+    assert schema_kind(rec["trace"]) == "runtime_trace"
+    assert schema_kind(rec["fairness"]) == "fabric_fairness"
+    assert schema_kind(rec["arbiter_stats"]) == "fabric_arbiter_stats"
+    # round-trips through the shared JSON IO
+    assert json_loads(json_dumps(rec))["tenant"] == "r"
+    from repro.api import validate_fairness_record
+    validate_fairness_record(rec["fairness"])
+
+
+# -- fabric-pressure trigger through the facade ----------------------------------
+
+def test_fabric_pressure_replans_stable_tenant(topo):
+    """A demand-stable arbitrated tenant picks up a peer's load shift via
+    the prices-moved hint (ROADMAP: arbiter-aware replan triggers)."""
+    windows = 10
+    trace = balanced_trace(N, windows)
+    spec = SessionSpec(
+        topology=topo, adaptivity="arbitrated", tenant="stable",
+        policy=PolicyConfig(fabric_staleness=2),
+    )
+    with Session(spec) as sess:
+        reports = []
+        for w in range(windows):
+            if w == 3:
+                sess.join_static_tenant("peer", elephant(topo, mb=512.0))
+            reports.append(sess.step(trace[w]))
+    reasons = [r.replan_reason for r in reports]
+    assert "fabric" in reasons, reasons
+    fired = reasons.index("fabric")
+    assert fired >= 5  # hint at w3 + fabric_staleness=2
+    # the fabric replan actually swapped a re-priced plan in
+    assert any(r.swapped for r in reports[fired + 1:])
+    # stable demand alone never triggered before the peer arrived
+    assert all(r == "none" for r in reasons[:3])
+
+
+def test_fabric_pressure_off_by_default(topo):
+    """Without fabric_staleness, hints are recorded but never fire — the
+    no-behavior-change default for existing arbitrated deployments."""
+    windows = 8
+    trace = balanced_trace(N, windows)
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="t")
+    with Session(spec) as sess:
+        for w in range(windows):
+            if w == 2:
+                sess.join_static_tenant("peer", elephant(topo, mb=512.0))
+            rep = sess.step(trace[w])
+            assert rep.replan_reason != "fabric"
+        assert sess.fabric.stats.price_hints >= 1
