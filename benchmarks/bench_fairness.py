@@ -1,6 +1,6 @@
 """Fabric-arbiter fairness: arbitrated co-planning vs independent replanning.
 
-Four sections over a 2-group/8-device fabric (DESIGN.md §4):
+Five sections over a 2-group/8-device fabric (DESIGN.md §4):
 
   * **host_coplan** — the acceptance scenario: a skewed All-to-Allv tenant
     sharing the fabric with a pinned (direct-routed) elephant background.
@@ -18,6 +18,16 @@ Four sections over a 2-group/8-device fabric (DESIGN.md §4):
     the jitted batch solve, replans pass the admission gate).
   * **four_tenant** — two skewed MWU tenants (different hotspots) plus two
     pinned elephants on disjoint rails, arbitrated to equilibrium.
+  * **mutual_drift** — the price-staleness regression (ROADMAP "Arbiter
+    price staleness under mutual drift"): two *runtime* tenants whose
+    hotspots rotate out of phase, each periodically landing on rails the
+    other just vacated.  The raw-ledger arbiter ("legacy" arm:
+    ``price_hint_rel=0``, no decay, no re-pricing) over-avoids the peer's
+    stale committed load and loses to the unpriced baseline (~0.92x
+    combined drain); the calibrated recency stack (decayed ledger prices +
+    swap-boundary re-pricing + the prices-moved soft deadline, the
+    arbitrated-session defaults) must recover to >= 1.0x.  The ``--smoke``
+    ``mutual_drift`` gate pins that threshold every PR.
 
 Metrics land in ``BENCH_fairness.json`` (tagged ``nimble.bench_fairness/v1``)
 with Jain's index and per-tenant drain times per section.  Every arbitrated
@@ -210,6 +220,134 @@ def runtime_adaptive(bg_mb: float = 192.0, windows: int = 32) -> dict:
     }
 
 
+def mutual_drift(windows: int = 48, dwell: int = 8) -> dict:
+    """Two mutually drifting runtime tenants: legacy prices lose, recency
+    wins.  Reports combined drain for the unpriced baseline, the
+    raw-ledger ("legacy") arbiter, and the calibrated recency defaults."""
+    from repro.fabric import ArbiterConfig
+
+    topo = Topology(N, group_size=GROUP)
+    # out-of-phase hotspot rotations over the same destination pool: each
+    # tenant's drift lands on rails the other occupied one phase earlier,
+    # so planning against the peer's *last* committed load means avoiding
+    # where it was and colliding with where it is
+    traces = {
+        "a": drifting_skew_trace(
+            N, windows, bytes_per_src=128 * MB, dwell=dwell,
+            hot_seq=(0, 4, 1, 5), seed=1,
+        ),
+        "b": drifting_skew_trace(
+            N, windows, bytes_per_src=128 * MB, dwell=dwell,
+            hot_seq=(4, 1, 5, 0), seed=2,
+        ),
+    }
+
+    def replay(mode: str) -> dict:
+        knobs = {}
+        if mode == "unpriced":
+            knobs["adaptivity"] = "adaptive"
+        else:
+            knobs["adaptivity"] = "arbitrated"
+            if mode == "legacy":
+                # the pre-recency arbiter: raw ledger prices, no hints,
+                # no swap-boundary re-pricing, no soft deadline
+                knobs.update(price_decay=None, fabric_staleness=None)
+        arb_cfg = (
+            ArbiterConfig(price_hint_rel=0.0) if mode == "legacy" else None
+        )
+        sess_a = Session(SessionSpec(
+            topology=topo, tenant="a", arbiter=arb_cfg, **knobs,
+        ))
+        join = {"fabric": sess_a.fabric} if mode != "unpriced" else {}
+        sess_b = Session(SessionSpec(
+            topology=topo, tenant="b",
+            **{**knobs, **join, "arbiter": None},
+        ))
+        combined = 0.0
+        own = {"a": 0.0, "b": 0.0}
+        with sess_a, sess_b:
+            for w in range(windows):
+                times = {}
+                for name, sess in (("a", sess_a), ("b", sess_b)):
+                    sess.step(traces[name][w])
+                    times[name] = (
+                        sess.runtime.telemetry.latest(1)[0].per_resource_time
+                    )
+                    own[name] += float(times[name].max())
+                combined += float(np.max(times["a"] + times["b"]))
+            return {
+                "combined_drain_s": combined,
+                "drain_s": dict(own),
+                "jain_index": jains_index(own.values()),
+                "replans": {
+                    "a": sess_a.runtime.stats.replans,
+                    "b": sess_b.runtime.stats.replans,
+                },
+                "reprices": (
+                    0 if mode == "unpriced"
+                    else sess_a.fabric.stats.reprices
+                ),
+                "price_hints": (
+                    0 if mode == "unpriced"
+                    else sess_a.fabric.stats.price_hints
+                ),
+            }
+
+    arms = {m: replay(m) for m in ("unpriced", "legacy", "calibrated")}
+    base = arms["unpriced"]["combined_drain_s"]
+    win_legacy = base / arms["legacy"]["combined_drain_s"]
+    win = base / arms["calibrated"]["combined_drain_s"]
+    emit(
+        f"fairness/mutual_drift/W{windows}",
+        arms["calibrated"]["combined_drain_s"] * 1e6,
+        f"unpriced={base * 1e3:.1f}ms "
+        f"legacy={win_legacy:.3f}x calibrated={win:.3f}x "
+        f"reprices={arms['calibrated']['reprices']} "
+        f"hints={arms['calibrated']['price_hints']} "
+        f"(target: calibrated>=1.0x)",
+    )
+    return {
+        "windows": windows,
+        "dwell": dwell,
+        "arms": arms,
+        "win_legacy": win_legacy,
+        "win": win,
+    }
+
+
+def validate_mutual_drift(section: dict) -> None:
+    """The ``--smoke`` mutual_drift gate: schema + the >=1.0x threshold.
+
+    Raises ``ValueError`` on a malformed section or a combined-drain
+    regression — the calibrated recency defaults must never lose to the
+    unpriced baseline on the mutual-drift scenario again.
+    """
+    if not isinstance(section, dict):
+        raise ValueError(
+            f"mutual_drift section is {type(section).__name__}, not dict"
+        )
+    for field in ("windows", "dwell", "arms", "win_legacy", "win"):
+        if field not in section:
+            raise ValueError(f"mutual_drift section missing field {field!r}")
+    arms = section["arms"]
+    for arm in ("unpriced", "legacy", "calibrated"):
+        if arm not in arms:
+            raise ValueError(f"mutual_drift arms missing {arm!r}")
+        drain = arms[arm].get("combined_drain_s")
+        if not isinstance(drain, float) or drain <= 0:
+            raise ValueError(
+                f"mutual_drift arm {arm!r} combined_drain_s = {drain!r} "
+                "not a float > 0"
+            )
+    if not isinstance(section["win"], float):
+        raise ValueError(f"mutual_drift win = {section['win']!r} not a float")
+    if section["win"] < 1.0:
+        raise ValueError(
+            f"mutual-drift regression: calibrated combined-drain win "
+            f"{section['win']:.4f}x < 1.0x vs the unpriced baseline"
+        )
+
+
 def four_tenant(bg_mb: float = 96.0) -> dict:
     """2 arbitrated skew tenants + 2 pinned elephants on disjoint rails."""
     cm = CostModel()
@@ -267,6 +405,7 @@ def metrics() -> dict:
         "weights_sweep": weights_sweep(),
         "runtime_adaptive": runtime_adaptive(),
         "four_tenant": four_tenant(),
+        "mutual_drift": mutual_drift(),
     }
 
 

@@ -17,10 +17,14 @@ writes the aggregate to benchmarks/results.csv.
 sections in a few seconds and writes ``BENCH_algo_overhead.json`` /
 ``BENCH_runtime_adapt.json`` / ``BENCH_fairness.json`` at the repo root,
 so planner-latency, adaptation, and arbitration regressions show up in the
-bench trajectory on every PR.  It finishes with a ``session_api`` check:
-one arbitrated two-tenant window through the ``repro.api.Session`` facade,
-with the exported JSON validated against the ``nimble.fabric_fairness/v1``
-schema (the full facade selfcheck is ``python -m repro.api.selfcheck``).
+bench trajectory on every PR.  Two gates close the run: ``mutual_drift``
+validates the fairness JSON's mutual-drift section (schema + the >= 1.0x
+combined-drain threshold the calibrated price-recency defaults must hold,
+ISSUE 5), and ``session_api`` pushes one arbitrated two-tenant window
+through the ``repro.api.Session`` facade with the exported JSON validated
+against the ``nimble.fabric_fairness/v1`` schema (the full facade
+selfcheck — including the decayed-prices check — is ``python -m
+repro.api.selfcheck``).
 """
 
 from __future__ import annotations
@@ -64,10 +68,21 @@ def smoke() -> None:
         kind="bench_runtime_adapt",
     )
     print("# --- fairness (smoke) ---")
+    fairness_metrics = bench_fairness.smoke()
     out3 = _write_metrics(
         "BENCH_fairness.json",
-        bench_fairness.smoke(),
+        fairness_metrics,
         kind="bench_fairness",
+    )
+    print("# --- mutual_drift gate (smoke) ---")
+    # schema + threshold gate (ISSUE 5): the calibrated recency defaults
+    # must keep the mutual-drift scenario at >= 1.0x combined drain vs the
+    # unpriced baseline; raises on regression
+    bench_fairness.validate_mutual_drift(fairness_metrics["mutual_drift"])
+    md = fairness_metrics["mutual_drift"]
+    print(
+        f"# mutual_drift: win={md['win']:.4f}x (legacy "
+        f"{md['win_legacy']:.4f}x) >= 1.0x OK"
     )
     print("# --- session_api (smoke) ---")
     from repro.api.selfcheck import smoke_session_check

@@ -138,6 +138,17 @@ def fairness_section():
             for p in pts
         )
     )
+    md = rec.get("mutual_drift")
+    if md is not None:
+        arms = md["arms"]
+        print(
+            f"\nmutual drift ({md['windows']}w, dwell {md['dwell']}): "
+            f"unpriced {arms['unpriced']['combined_drain_s'] * 1e3:.1f}ms, "
+            f"raw-ledger prices {md['win_legacy']:.3f}x, "
+            f"calibrated recency {md['win']:.3f}x "
+            f"({arms['calibrated']['reprices']} swap-boundary reprices, "
+            f"{arms['calibrated']['price_hints']} hints; gate: >= 1.0x)"
+        )
     # gated vs no-trigger windows (WindowReport.trigger_reason): "gated"
     # means a real trigger fired and the fabric gate suppressed it — not
     # the same as a window where nothing triggered at all

@@ -22,10 +22,18 @@ current environment.
 """
 
 from .session import PLAN_MODES, Session
-from .spec import ADAPTIVITY_LEVELS, SessionSpec, TopologySpec
+from .spec import (
+    ADAPTIVITY_LEVELS,
+    FABRIC_STALENESS_DEFAULT,
+    PRICE_DECAY_DEFAULT,
+    SessionSpec,
+    TopologySpec,
+)
 
 __all__ = [
     "ADAPTIVITY_LEVELS",
+    "FABRIC_STALENESS_DEFAULT",
+    "PRICE_DECAY_DEFAULT",
     "PLAN_MODES",
     "Session",
     "SessionSpec",

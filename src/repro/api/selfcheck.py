@@ -11,7 +11,11 @@ this environment:
      the exported fairness record validates against the
      ``nimble.fabric_fairness/v1`` schema;
   4. **pressure**   — a demand-stable arbitrated tenant picks up a peer's
-     committed-load shift via the prices-moved hint (``reason="fabric"``).
+     committed-load shift via the prices-moved hint (``reason="fabric"``);
+  5. **decay**      — price recency (ISSUE 5): stamped peer loads fade
+     monotonically as the fabric clock runs past them, unstamped (host)
+     commits never decay, and ``price_decay=None`` exports the raw ledger
+     byte-identically.
 
 ``benchmarks/run.py --smoke`` reuses check 3 as its ``session_api`` gate.
 """
@@ -185,6 +189,55 @@ def check_fabric_pressure(windows: int = 8) -> str:
     return f"pressure: fabric replan at w{reasons.index('fabric')} of {windows}"
 
 
+def check_price_decay() -> str:
+    """Decayed ledger prices: monotone fade for stamped commits, identity
+    for unstamped commits and for ``price_decay=None``."""
+    from ..core.mcf import solve_direct
+    from ..core.topology import Topology
+    from ..fabric import ArbiterConfig, FabricArbiter
+
+    topo = Topology(8, group_size=4)
+    bg = solve_direct(
+        topo, {(0, 4): 256 * MB, (4, 0): 256 * MB}
+    ).resource_bytes
+
+    arb = FabricArbiter(topo, cfg=ArbiterConfig(price_decay=2.0))
+    raw = FabricArbiter(topo)  # price_decay=None: the raw-ledger control
+    for a in (arb, raw):
+        a.register("fresh")
+        a.register("stale")
+        a.register("host")
+    for a in (arb, raw):
+        a.commit("stale", bg, window=0)     # stamped, then never refreshed
+        a.commit("host", bg)                # unstamped: timeless
+    prices = []
+    for w in range(0, 8, 2):
+        for a in (arb, raw):
+            a.commit("fresh", bg, window=w)  # advances the fabric clock
+        decayed = arb.state.external_load("fresh", half_life=2.0)
+        stale_part = decayed - bg  # host's undecayed share subtracted
+        prices.append(stale_part)
+        if not np.allclose(
+            raw.state.external_load("fresh"), 2.0 * bg
+        ):
+            raise AssertionError("price_decay=None no longer raw ledger")
+        if arb.state.decay_factor("host", 2.0) != 1.0:
+            raise AssertionError("unstamped commit decayed")
+    for older, newer in zip(prices, prices[1:]):
+        if not (newer <= older + 1e-12).all() or not (newer < older).any():
+            raise AssertionError(
+                "decayed prices not monotone decreasing in staleness"
+            )
+    half = arb.state.decay_factor("stale", 2.0)
+    expect = 0.5 ** (arb.state.clock / 2.0)
+    if abs(half - expect) > 1e-12:
+        raise AssertionError(f"decay factor {half} != 0.5^(stale/hl) {expect}")
+    return (
+        f"decay: stamped peer faded to {half:.3f}x over "
+        f"{arb.state.clock} windows (hl=2); unstamped + decay=None exact"
+    )
+
+
 def smoke_session_check() -> dict:
     """The ``benchmarks/run.py --smoke`` gate: arbitrated two-tenant window
     through the facade + schema validation.  Returns a summary record."""
@@ -205,6 +258,7 @@ def main(argv=None) -> int:
         check_adaptive,
         check_arbitrated,
         check_fabric_pressure,
+        check_price_decay,
     ]
     failed = 0
     for check in checks:

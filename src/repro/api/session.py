@@ -271,7 +271,14 @@ class Session:
         if commit:
             if self.arbiter is None:
                 raise RuntimeError("commit=True requires an arbitrated session")
-            self.arbiter.commit(self.spec.tenant, plan.resource_bytes)
+            # host commits are unstamped (timeless: no window clock to
+            # decay against) but fingerprint-tagged, so a session planning
+            # on a different fabric geometry than the ledger's fails by
+            # name instead of by shape
+            self.arbiter.commit(
+                self.spec.tenant, plan.resource_bytes,
+                fingerprint=self.topo.fingerprint,
+            )
         return plan
 
     # -- runtime loop ------------------------------------------------------------

@@ -22,10 +22,19 @@ Adaptivity levels (strictly increasing capability):
     :class:`~repro.fabric.FabricArbiter` as tenant ``tenant`` (weight /
     QoS / admission from this spec): solves are congestion-priced, replans
     gated, link events and price hints arrive over the shared bus.
+    Price-recency protection is ON by default at this level
+    (``price_decay`` / ``fabric_staleness``, calibrated on the
+    mutual-drift scenarios in ``benchmarks/bench_fairness.py``): exported
+    prices fade as peers' telemetry stamps go stale, pending plans are
+    re-priced at the swap boundary, and a "prices moved" hint
+    force-replans a demand-stable tenant.  Pass ``None`` for either knob
+    to opt back out — byte-identical to the raw-ledger arbiter.
 
-Every ``None`` field falls through to the exact library default the
-hand-wired constructors use, which is what makes the facade's bit-exactness
-guarantee (``tests/test_session.py``) possible at all.
+Every ``None`` component-config field falls through to the exact library
+default the hand-wired constructors use, which is what makes the facade's
+bit-exactness guarantee (``tests/test_session.py``) possible at all; the
+two recency knobs are the one deliberate exception, and ``None`` there is
+the opt-*out*.
 """
 
 from __future__ import annotations
@@ -41,6 +50,20 @@ from ..runtime import EstimatorConfig, PolicyConfig, RuntimeConfig
 
 #: valid ``SessionSpec.adaptivity`` values, weakest first
 ADAPTIVITY_LEVELS = ("static", "adaptive", "arbitrated")
+
+#: calibrated price-recency defaults for **arbitrated** sessions (ISSUE 5,
+#: DESIGN.md §4.3), chosen on the mutual-drift scenarios in
+#: ``benchmarks/bench_fairness.py``: a 4-window half-life fades a peer
+#: that stopped refreshing telemetry to ~3% of its committed load within
+#: two dwell periods of the drift traces without perturbing fresh or
+#: host-committed (unstamped) loads, and a 2-window soft deadline
+#: re-prices a demand-stable tenant two windows after a "prices moved"
+#: hint — late enough that one in-flight replan absorbs the shift, early
+#: enough that stale avoidance never outlives a drift phase.  Both are
+#: per-session knobs; ``None`` opts back out to the raw PR-3/PR-4 ledger
+#: behavior (byte-identical, pinned by ``tests/test_price_recency.py``).
+PRICE_DECAY_DEFAULT: float = 4.0      # half-life, windows
+FABRIC_STALENESS_DEFAULT: int = 2     # windows from hint to forced replan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +127,19 @@ class SessionSpec:
     arbiter: Optional[ArbiterConfig] = None
     fabric: Optional[object] = None          # shared FabricArbiter to join
     initial_demand: Optional[object] = None  # [n, n] warm demand matrix
+    # -- price recency (arbitrated sessions; ignored otherwise) ----------------
+    # half-life (windows) for recency decay of peers' stamped committed
+    # load in exported prices, and the soft deadline (windows) between a
+    # "prices moved" hint and a forced re-pricing replan.  The calibrated
+    # defaults are ON for arbitrated sessions; THESE spec-level knobs are
+    # the opt-out — pass None here for raw-ledger / hint-only behavior.
+    # An explicit non-None ``arbiter=ArbiterConfig(price_decay=...)`` or
+    # ``policy=PolicyConfig(fabric_staleness=...)`` wins over these, but a
+    # component-config None means "inherit" (it is indistinguishable from
+    # the constructor default), not "disable"; a joined ``fabric`` keeps
+    # its owner's arbiter config.
+    price_decay: Optional[float] = PRICE_DECAY_DEFAULT
+    fabric_staleness: Optional[int] = FABRIC_STALENESS_DEFAULT
 
     def __post_init__(self):
         if self.adaptivity not in ADAPTIVITY_LEVELS:
@@ -142,6 +178,16 @@ class SessionSpec:
                 "'arbiter' configures a session-owned arbiter; a joined "
                 "'fabric' already has its own config"
             )
+        if self.price_decay is not None and self.price_decay <= 0:
+            raise ValueError(
+                f"price_decay half-life must be > 0 windows or None, got "
+                f"{self.price_decay}"
+            )
+        if self.fabric_staleness is not None and self.fabric_staleness < 1:
+            raise ValueError(
+                f"fabric_staleness must be >= 1 window or None, got "
+                f"{self.fabric_staleness}"
+            )
 
     # -- builders ----------------------------------------------------------------
     def build_topology(self) -> Topology:
@@ -171,3 +217,39 @@ class SessionSpec:
             qos=self.qos,
             admission=self.admission or AdmissionConfig(),
         )
+
+    def policy_config(self) -> Optional[PolicyConfig]:
+        """Replan policy with the calibrated ``fabric_staleness`` folded in.
+
+        Arbitrated sessions get the spec-level soft deadline unless the
+        explicit ``policy`` already pins a non-``None`` one (a ``None``
+        there is the constructor default and means "inherit" — disabling
+        goes through ``SessionSpec.fabric_staleness=None``, the one knob
+        that can express the opt-out).  Non-arbitrated sessions pass
+        ``policy`` through untouched — without an arbiter there are no
+        hints for the deadline to watch, and the hand-wired constructor
+        defaults must stay bit-identical.
+        """
+        if self.adaptivity != "arbitrated" or self.fabric_staleness is None:
+            return self.policy
+        policy = self.policy or PolicyConfig()
+        if policy.fabric_staleness is not None:
+            return policy
+        return dataclasses.replace(
+            policy, fabric_staleness=self.fabric_staleness
+        )
+
+    def arbiter_config(self) -> ArbiterConfig:
+        """Arbiter config with the calibrated ``price_decay`` folded in.
+
+        Used only when the session constructs and owns its fabric; a
+        joined ``fabric`` already runs under its owner's config.  An
+        explicit non-``None`` ``arbiter=ArbiterConfig(price_decay=...)``
+        wins over the spec-level knob; ``ArbiterConfig(price_decay=None)``
+        is the constructor default and means "inherit" — disabling decay
+        goes through ``SessionSpec.price_decay=None``.
+        """
+        cfg = self.arbiter or ArbiterConfig()
+        if self.price_decay is not None and cfg.price_decay is None:
+            cfg = dataclasses.replace(cfg, price_decay=self.price_decay)
+        return cfg

@@ -17,6 +17,7 @@ from .arbiter import (
     ArbiterStats,
     FabricArbiter,
     QOS_RANK,
+    RepriceDecision,
     TenantConfig,
 )
 from .fairness import (
@@ -35,6 +36,7 @@ __all__ = [
     "ArbiterStats",
     "FabricArbiter",
     "QOS_RANK",
+    "RepriceDecision",
     "TenantConfig",
     "fairness_report",
     "jains_index",

@@ -77,8 +77,16 @@ class ArbiterConfig:
     n_sweeps: int = 3   # max sequential-greedy sweeps per arbitrate() call
     # publish a "prices moved" hint on the bus when a commit shifts the
     # total committed load by more than this fraction of the peak load
-    # (the arbiter-aware replan trigger, DESIGN.md §4.3); <= 0 disables
+    # (the arbiter-aware replan trigger, DESIGN.md §4.3); <= 0 disables —
+    # and also disables swap-boundary re-pricing, which reuses this
+    # threshold to decide whether a pending plan's prices went stale
     price_hint_rel: float = 0.25
+    # recency half-life (windows) for exported prices: a peer's *stamped*
+    # committed load is weighted by 0.5 ** (staleness / price_decay) in
+    # prices_for, so telemetry that stops refreshing fades out of every
+    # other tenant's solve.  None = raw ledger prices, byte-identical to
+    # the undecayed arbiter; unstamped (host) commits never decay.
+    price_decay: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -90,15 +98,44 @@ class ArbiterStats:
     broadcasts: int = 0    # link-event batches published
     commits: int = 0       # ledger commits
     price_hints: int = 0   # "prices moved" hints published
+    reprices: int = 0      # swap-boundary re-price verdicts (stale pendings)
 
     def to_json_obj(self) -> dict:
         return tag("fabric_arbiter_stats", dataclasses.asdict(self))
+
+
+@dataclasses.dataclass(frozen=True)
+class RepriceDecision:
+    """Verdict of a swap-boundary re-price check (:meth:`FabricArbiter.
+    reprice`): whether the prices a pending plan was solved under moved
+    materially (past ``price_hint_rel``) since issue, the relative move,
+    and the live price vector to re-solve against."""
+
+    moved: bool
+    rel_change: float
+    prices: Optional[np.ndarray]
 
 
 def _same_prices(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> bool:
     if a is None or b is None:
         return a is None and b is None
     return np.array_equal(a, b)
+
+
+def _price_rel_change(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> float:
+    """Relative movement between two price vectors: peak absolute change
+    over the peak price across both (``None`` counts as all-zero), the
+    same normalization the publish-side hint uses on committed loads."""
+    if a is None and b is None:
+        return 0.0
+    if a is None:
+        a = np.zeros_like(b)
+    elif b is None:
+        b = np.zeros_like(a)
+    scale = max(float(a.max()), float(b.max()))
+    if scale <= 0.0:
+        return 0.0
+    return float(np.max(np.abs(a - b))) / scale
 
 
 class FabricArbiter:
@@ -128,9 +165,14 @@ class FabricArbiter:
         ``session.topo`` / ``session.cost_model`` / ``session.spec.
         arbiter``, so this module never imports ``repro.api``.  Sessions
         that *join* an existing fabric pass it via ``SessionSpec.fabric``
-        instead of constructing one here.
+        instead of constructing one here.  ``spec.arbiter_config()`` folds
+        the session-level calibrated ``price_decay`` into the arbiter
+        config.
         """
-        return cls(session.topo, session.cost_model, cfg=session.spec.arbiter)
+        return cls(
+            session.topo, session.cost_model,
+            cfg=session.spec.arbiter_config(),
+        )
 
     # -- registration -----------------------------------------------------------
     def register(self, name: str, cfg: TenantConfig | None = None) -> str:
@@ -223,19 +265,66 @@ class FabricArbiter:
         callers can take the exact unarbitrated solve path — the
         single-tenant zero-overhead contract.  Prices are non-negative and
         elementwise monotone in peers' committed load by construction.
+
+        With ``ArbiterConfig.price_decay`` set, each peer's contribution is
+        recency-weighted (``FabricState.decay_factor``): stale telemetry
+        fades with a ``price_decay``-window half-life instead of steering
+        this tenant's solve forever, and the decayed prices are monotone
+        non-increasing in staleness.  ``price_decay=None`` exports the raw
+        ledger — byte-identical to the pre-recency arbiter.
         """
         if name not in self._tenants:
             raise KeyError(f"tenant {name!r} not registered")
-        ext = self.state.external_load(name)
+        ext = self.state.external_load(name, half_life=self.cfg.price_decay)
         if not ext.any():
             return None
         return ext / self._tenants[name].weight
 
-    def commit(self, name: str, resource_bytes: np.ndarray) -> None:
-        """Telemetry export: replace ``name``'s committed load in the ledger."""
+    def reprice(
+        self, name: str, solved_prices: Optional[np.ndarray]
+    ) -> RepriceDecision:
+        """Swap-boundary re-price check (DESIGN.md §4.3).
+
+        ``OrchestrationRuntime`` calls this when a pending plan reaches its
+        swap boundary, passing the prices the plan was *solved* under.  The
+        verdict compares them against the live ``prices_for(name)``: when
+        the peak relative move is at least ``price_hint_rel``, the plan is
+        priced stale — the fabric shifted inside the issue→swap window —
+        and the caller should swap it in anyway (it is fresher than the
+        active plan) but immediately re-solve the same demand against
+        ``decision.prices`` and park the refinement as the next pending
+        (swap-and-refine, see ``OrchestrationRuntime._maybe_swap``).
+        ``price_hint_rel <= 0`` disables repricing (never moved),
+        mirroring the publish-side hint switch.  Read-only: no ledger or
+        gate state changes; only ``stats.reprices`` counts the stale
+        verdicts.
+        """
+        prices = self.prices_for(name)
+        rel = _price_rel_change(solved_prices, prices)
+        moved = self.cfg.price_hint_rel > 0 and rel >= self.cfg.price_hint_rel
+        if moved:
+            self.stats.reprices += 1
+        return RepriceDecision(moved=moved, rel_change=rel, prices=prices)
+
+    def commit(
+        self,
+        name: str,
+        resource_bytes: np.ndarray,
+        window: Optional[int] = None,
+        fingerprint: Optional[tuple] = None,
+    ) -> None:
+        """Telemetry export: replace ``name``'s committed load in the ledger.
+
+        ``window`` stamps the commit for recency decay (runtime tenants
+        pass their window counter; host commits stay unstamped/timeless);
+        ``fingerprint`` is validated against the fabric's — see
+        ``FabricState.commit``.
+        """
         if name not in self._tenants:
             raise KeyError(f"tenant {name!r} not registered")
-        self.state.commit(name, resource_bytes)
+        self.state.commit(
+            name, resource_bytes, window=window, fingerprint=fingerprint
+        )
         self.stats.commits += 1
         self._maybe_publish_price_hint(name)
 
@@ -252,26 +341,32 @@ class FabricArbiter:
         solo fabrics never hint — part of the single-tenant zero-overhead
         contract; withdrawal passes ``False`` because the survivors of a
         departure must learn about it no matter how few remain.
+
+        A hint with nobody listening is pure noise: when the bus has no
+        subscribers (``unregister`` removes the departing tenant's
+        subscription *before* hinting, so the last runtime's own departure
+        leaves the bus empty), nothing is published, ``stats.price_hints``
+        stays put, and the hinted-load watermark is left alone — a
+        subscriber arriving later still sees the accumulated move against
+        the last snapshot that was actually delivered.
         """
         if self.cfg.price_hint_rel <= 0:
             return
         if require_peers and len(self._tenants) < 2:
             return
-        total = self.state.total_load()
-        last = (
-            self._hinted_load
-            if self._hinted_load is not None
-            else np.zeros_like(total)
-        )
-        scale = max(float(total.max()), float(last.max()))
-        if scale <= 0.0:
+        if len(self.bus) == 0:
             return
-        rel = float(np.max(np.abs(total - last))) / scale
+        total = self.state.total_load()
+        rel = _price_rel_change(total, self._hinted_load)
         if rel < self.cfg.price_hint_rel:
             return
         self._hinted_load = total.copy()
         self.stats.price_hints += 1
-        self.bus.publish([PricesMovedHint(tenant=committer, rel_change=rel)])
+        self.bus.publish([
+            PricesMovedHint(
+                tenant=committer, rel_change=rel, clock=self.state.clock
+            )
+        ])
 
     # -- admission --------------------------------------------------------------
     def admit(

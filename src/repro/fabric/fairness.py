@@ -61,7 +61,15 @@ def weighted_drains(
 def fairness_report(
     state: FabricState, weights: Mapping[str, float] | None = None
 ) -> dict:
-    """Tagged fairness record for the current ledger contents."""
+    """Tagged fairness record for the current ledger contents.
+
+    Fairness is accounted over the **raw** committed loads — drain times
+    measure bytes a tenant actually put on the fabric, so price-recency
+    decay never touches them.  The record carries the recency view
+    alongside (``clock``, per-tenant ``staleness``; ``None`` = unstamped)
+    so report consumers can tell a fresh ledger from one whose prices have
+    largely faded.
+    """
     weights = weights or {}
     drains = state.drain_times()
     wd = weighted_drains(drains, weights)
@@ -76,5 +84,7 @@ def fairness_report(
             "jain_index": jains_index(wd.values()),
             "maxmin_violation": maxmin_violation(wd.values()),
             "combined_drain_s": state.combined_drain_s(),
+            "clock": int(state.clock),
+            "staleness": {t: state.staleness(t) for t in order},
         },
     )

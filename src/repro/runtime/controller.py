@@ -30,9 +30,12 @@ swap loop on one endpoint:
     (``register_runtime``, DESIGN.md §4), solves price in peers' committed
     load (``ext_loads``), replans pass the fabric admission gate (throttled
     decisions surface as ``replan_reason="gated"``), executed loads are
-    exported to the shared ledger every window, and broadcast link events
-    arrive through the shared bus.  Unbound (or solo-tenant) behavior is
-    bit-identical to the standalone runtime.
+    exported to the shared ledger every window (window-stamped, so peers'
+    price-recency decay can fade them), broadcast link events arrive
+    through the shared bus, and a pending plan whose exported prices moved
+    materially between issue and swap boundary is re-solved against live
+    prices before it is allowed in (``FabricArbiter.reprice``).  Unbound
+    (or solo-tenant) behavior is bit-identical to the standalone runtime.
 
 ``run_trace`` drives the loop over a ``[W, n, n]`` traffic trace as a
 discrete-event simulation through ``fabsim``; ``run_static`` and
@@ -166,14 +169,26 @@ class RuntimeConfig:
 
 @dataclasses.dataclass
 class PlanHandle:
-    """One buffered plan: the routing policy plus its provenance."""
+    """One buffered plan: the routing policy plus its provenance.
+
+    ``solved_demand`` / ``solved_prices`` record what the plan was solved
+    *against*, so the swap boundary can re-price it (DESIGN.md §4.3): when
+    the fabric's exported prices moved materially between issue and swap,
+    the pending plan is re-solved on the same demand under live prices.
+    ``repriced`` marks a handle that already went through one re-price
+    round — the retry swaps at its boundary regardless, so a continuously
+    drifting fabric delays a swap by at most one re-solve.
+    """
 
     plan: Plan
     signature: tuple
     version: int
     solved_window: int
-    source: str            # "initial" | "solve" | "cache"
+    source: str            # "initial" | "solve" | "cache" | "reprice"
     baseline_ratio: float  # Z/Z* on its own solve demand, for the policy
+    solved_demand: Optional[np.ndarray] = None
+    solved_prices: Optional[np.ndarray] = None
+    repriced: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,6 +224,7 @@ class RuntimeStats:
     cache_hits: int = 0
     swaps: int = 0
     events: int = 0
+    reprices: int = 0       # stale pendings re-solved on live prices at swap
 
     def to_json_obj(self) -> dict:
         return tag("runtime_stats", dataclasses.asdict(self))
@@ -268,9 +284,10 @@ class OrchestrationRuntime:
         to hand-wired ``OrchestrationRuntime(topo)`` stacks.
         """
         spec = session.spec
-        policy = (
-            ReplanPolicy(spec.policy) if spec.policy is not None else None
-        )
+        # policy_config() folds the spec-level calibrated fabric_staleness
+        # into the policy for arbitrated sessions
+        pcfg = spec.policy_config()
+        policy = ReplanPolicy(pcfg) if pcfg is not None else None
         estimator = (
             DemandEstimator(session.topo.n_devices, spec.estimator)
             if spec.estimator is not None
@@ -318,6 +335,7 @@ class OrchestrationRuntime:
         # gate, and executed loads are committed to the shared ledger
         self._arbiter = None
         self._tenant: Optional[str] = None
+        self._fabric_window_offset = 0
         self._rebuild_planner()
 
         if initial_demand is None:
@@ -343,8 +361,17 @@ class OrchestrationRuntime:
         self._arbiter = arbiter
         self._tenant = tenant
         if arbiter is not None:
+            # align this runtime's window counter with the fabric clock:
+            # commits are stamped in *fabric* windows, so a tenant joining
+            # a fabric that has already run N windows is not priced as N
+            # windows stale (and decayed to nothing) just because its own
+            # counter starts at zero.  On a fresh fabric the offset is 0 —
+            # stamps equal local windows, the pre-offset behavior.
+            self._fabric_window_offset = arbiter.state.clock - self._window
             # warm the priced jitted closure alongside the unpriced one
             _batch_planner(self.tables, self.cfg.planner, priced=True)
+        else:
+            self._fabric_window_offset = 0
 
     def _arbiter_prices(self) -> Optional[np.ndarray]:
         """Exported prices for this tenant (None when unbound or alone)."""
@@ -370,10 +397,20 @@ class OrchestrationRuntime:
             ext_loads=ext_loads,
         )
 
+    _PRICES_UNSET = object()   # sentinel: "fetch prices from the arbiter"
+
     def _solve_handle(self, demand: np.ndarray, window: int,
-                      source: str) -> Tuple[PlanHandle, bool]:
-        """Probe the plan cache, solving on a miss; returns (handle, hit)."""
-        prices = self._arbiter_prices()
+                      source: str,
+                      repriced: bool = False,
+                      prices=_PRICES_UNSET) -> Tuple[PlanHandle, bool]:
+        """Probe the plan cache, solving on a miss; returns (handle, hit).
+
+        ``prices`` lets a caller that already holds the live price vector
+        (the swap-boundary reprice verdict) pass it through instead of
+        recomputing the decayed external load.
+        """
+        if prices is OrchestrationRuntime._PRICES_UNSET:
+            prices = self._arbiter_prices()
         sig = self.demand_signature(demand, prices)
         plan = self._cache_get(sig)
         cache_hit = plan is not None
@@ -391,6 +428,9 @@ class OrchestrationRuntime:
             solved_window=window,
             source="cache" if cache_hit else source,
             baseline_ratio=self._ratio(plan, demand),
+            solved_demand=demand,
+            solved_prices=prices,
+            repriced=repriced,
         )
         return handle, cache_hit
 
@@ -485,18 +525,54 @@ class OrchestrationRuntime:
 
     # -- the loop ----------------------------------------------------------------
     def _maybe_swap(self, window: int) -> bool:
-        """Atomic plan swap at the window boundary (never mid-round)."""
-        if self._pending is not None and self._pending[1] <= window:
-            handle = self._pending[0]
-            self._active = handle
-            self._pending = None
-            self.stats.swaps += 1
-            # pass the solve provenance: a fabric-pressure hint newer than
-            # the swapped plan's solve must survive the swap (the plan was
-            # priced before the fabric shifted)
-            self.policy.notify_swap(handle.solved_window)
-            return True
-        return False
+        """Atomic plan swap at the window boundary (never mid-round).
+
+        Arbitrated runtimes re-price the pending plan here (DESIGN.md
+        §4.3): the plan was solved ``solve_delay_windows`` ago under the
+        prices of its issue window, and on a fabric whose peers moved
+        meanwhile those prices describe where everyone *was* — exactly the
+        mutual over-avoidance failure.  When the arbiter's ``reprice``
+        verdict says the prices moved past ``price_hint_rel`` since issue,
+        the plan **still swaps in** — it was solved on fresher demand than
+        whatever it replaces, and holding the older active plan an extra
+        window is strictly worse — but the same demand is immediately
+        re-solved against live prices and the *refined* plan parked as the
+        new pending (swap-and-refine).  One refine round per replan chain
+        (``PlanHandle.repriced``): the refined plan swaps at its own
+        boundary regardless, so continuous drift costs at most one extra
+        solve per replan and can never starve the dataplane of swaps.
+        Refines never charge the admission gate — they complete an
+        already-admitted replan rather than issuing a new one.
+        """
+        if self._pending is None or self._pending[1] > window:
+            return False
+        handle = self._pending[0]
+        self._pending = None
+        if (
+            self._arbiter is not None
+            and not handle.repriced
+            and handle.solved_demand is not None
+        ):
+            verdict = self._arbiter.reprice(
+                self._tenant, handle.solved_prices
+            )
+            if verdict.moved:
+                re_handle, cache_hit = self._solve_handle(
+                    handle.solved_demand, window, "reprice", repriced=True,
+                    prices=verdict.prices,
+                )
+                ready = window + (
+                    1 if cache_hit else max(1, self.cfg.solve_delay_windows)
+                )
+                self._pending = (re_handle, ready)
+                self.stats.reprices += 1
+        self._active = handle
+        self.stats.swaps += 1
+        # pass the solve provenance: a fabric-pressure hint newer than
+        # the swapped plan's solve must survive the swap (the plan was
+        # priced before the fabric shifted)
+        self.policy.notify_swap(handle.solved_window)
+        return True
 
     def _issue_replan(self, predicted: np.ndarray, window: int,
                       source_hint: str = "solve") -> Tuple[PlanHandle, bool]:
@@ -529,8 +605,15 @@ class OrchestrationRuntime:
         self.telemetry.record(w, sim, pair_bytes=demand)
         if self._arbiter is not None:
             # telemetry export: this window's realized per-resource loads
-            # become this tenant's committed load in the shared ledger
-            self._arbiter.commit(self._tenant, exec_plan.resource_bytes)
+            # become this tenant's committed load in the shared ledger —
+            # window-stamped so peers' recency decay can fade it, and
+            # fingerprint-tagged so a commit racing a topology rebuild is
+            # rejected by name instead of as an opaque shape error
+            self._arbiter.commit(
+                self._tenant, exec_plan.resource_bytes,
+                window=w + self._fabric_window_offset,
+                fingerprint=self.topo.fingerprint,
+            )
 
         # estimate next-window demand and evaluate the triggers
         self.estimator.update(demand)
@@ -638,7 +721,11 @@ class OrchestrationRuntime:
                     self._window, plan.resource_bytes, pair_bytes=D
                 )
                 if self._arbiter is not None:
-                    self._arbiter.commit(self._tenant, plan.resource_bytes)
+                    self._arbiter.commit(
+                        self._tenant, plan.resource_bytes,
+                        window=self._window + self._fabric_window_offset,
+                        fingerprint=self.topo.fingerprint,
+                    )
             self.estimator.update(D)
             self._window += 1
 

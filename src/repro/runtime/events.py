@@ -71,11 +71,22 @@ class PricesMovedHint:
     runtimes forward it to ``ReplanPolicy.notify_fabric_pressure``, which
     treats it as a soft staleness deadline (``PolicyConfig.
     fabric_staleness``): a demand-stable tenant still re-prices a fabric
-    that shifted under it.
+    that shifted under it.  Hints complement the pull side of the same
+    recency machinery: the arbiter's decayed prices and its swap-boundary
+    ``reprice`` hook (DESIGN.md §4.3) close the issue→swap staleness
+    window for plans already in flight, while the hint wakes tenants whose
+    own triggers would otherwise never fire.
+
+    ``clock`` is the fabric ledger clock (newest stamped commit window) at
+    publish time — 0 when no stamped commit has landed yet (matching
+    ``FabricState.clock``), ``None`` only from publishers that predate
+    recency stamps; diagnostic only, receivers key off their own window
+    counters.
     """
 
     tenant: str
     rel_change: float
+    clock: Optional[int] = None
 
 
 def merge_overrides(events: Iterable[LinkEvent]

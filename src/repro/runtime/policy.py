@@ -28,12 +28,20 @@ Three triggers bypass the congestion hysteresis: a **staleness deadline**
 (optional: plans older than ``max_staleness`` windows replan regardless,
 for deployments whose drift is slow but unbounded), **topology events**
 (link down/degraded — always replan, immediately), and **fabric
-pressure** (optional: a "prices moved" hint from the fabric arbiter —
-peers' committed load shifted materially — is treated as a *soft
-staleness deadline*: within ``fabric_staleness`` windows of the hint the
-tenant replans with ``reason="fabric"`` even if its own demand is
-perfectly stable, so it re-prices the fabric it actually shares; see
-``FabricArbiter`` price hints, DESIGN.md §4.3).
+pressure** (a "prices moved" hint from the fabric arbiter — peers'
+committed load shifted materially — is treated as a *soft staleness
+deadline*: within ``fabric_staleness`` windows of the hint the tenant
+replans with ``reason="fabric"`` even if its own demand is perfectly
+stable, so it re-prices the fabric it actually shares; see
+``FabricArbiter`` price hints, DESIGN.md §4.3).  The constructor default
+``fabric_staleness=None`` keeps hand-wired runtimes bit-identical to the
+pre-hint behavior; **arbitrated sessions** enable it with the calibrated
+``repro.api.FABRIC_STALENESS_DEFAULT`` (2 windows — one boundary of
+grace so an in-flight replan can absorb the shift, calibrated on the
+mutual-drift scenarios in ``benchmarks/bench_fairness.py``).  The trigger
+covers tenants with *no* replan in flight; the complementary issue→swap
+staleness window is closed by the controller's swap-boundary re-pricing
+(``OrchestrationRuntime._maybe_swap`` + ``FabricArbiter.reprice``).
 """
 
 from __future__ import annotations
@@ -51,6 +59,8 @@ class PolicyConfig:
     max_staleness: Optional[int] = None  # windows; None = no deadline
     # windows between a fabric "prices moved" hint and a forced replan
     # (soft staleness deadline); None disables the fabric-pressure trigger
+    # (hand-wired default — arbitrated Sessions pass the calibrated
+    # repro.api.FABRIC_STALENESS_DEFAULT instead)
     fabric_staleness: Optional[int] = None
 
 

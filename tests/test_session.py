@@ -95,6 +95,19 @@ def test_spec_validation():
     with pytest.raises(ValueError, match="planner"):
         SessionSpec(topology=ts, adaptivity="adaptive",
                     runtime=RuntimeConfig(), planner=PlannerConfig())
+    # recency knobs: positive-or-None
+    with pytest.raises(ValueError, match="price_decay"):
+        SessionSpec(topology=ts, price_decay=0.0)
+    with pytest.raises(ValueError, match="fabric_staleness"):
+        SessionSpec(topology=ts, fabric_staleness=0)
+    # explicit policy wins over the spec-level calibrated deadline
+    from repro.runtime import PolicyConfig as PC
+    spec = SessionSpec(topology=ts, adaptivity="arbitrated",
+                       policy=PC(fabric_staleness=7))
+    assert spec.policy_config().fabric_staleness == 7
+    # non-arbitrated sessions never fold the deadline in
+    assert SessionSpec(topology=ts, adaptivity="adaptive").policy_config() \
+        is None
 
 
 def test_cost_overrides_applied():
@@ -147,11 +160,49 @@ def test_adaptive_bit_identical_vs_handwired(topo):
 # -- arbitrated: identical reports AND fairness ----------------------------------
 
 def test_arbitrated_bit_identical_vs_handwired(topo):
+    """Opt-out Session (recency knobs None) == plain hand-wired stack."""
     trace = drifting_skew_trace(N, 20, dwell=6)
     bg = elephant(topo)
 
     rt = OrchestrationRuntime(topo)
     arb = FabricArbiter(topo)
+    arb.register_runtime("skew", rt)
+    arb.register("bg")
+    arb.commit("bg", bg.resource_bytes)
+    ref = rt.run_trace(trace)
+    ref_fairness = arb.fairness_report()
+
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="skew",
+                       price_decay=None, fabric_staleness=None)
+    with Session(spec) as sess:
+        sess.join_static_tenant("bg", bg)
+        got = sess.run_trace(trace)
+        got_fairness = sess.fabric.fairness_report()
+
+    assert_reports_identical(ref, got)
+    assert ref_fairness == got_fairness
+
+
+def test_arbitrated_default_matches_calibrated_handwired(topo):
+    """Default arbitrated Session == hand-wired stack carrying the
+    calibrated recency knobs explicitly — the facade adds wiring, not
+    semantics, even with the new defaults flipped on."""
+    from repro.api import FABRIC_STALENESS_DEFAULT, PRICE_DECAY_DEFAULT
+    from repro.fabric import ArbiterConfig
+    from repro.runtime import ReplanPolicy
+
+    trace = drifting_skew_trace(N, 20, dwell=6)
+    bg = elephant(topo)
+
+    rt = OrchestrationRuntime(
+        topo,
+        policy=ReplanPolicy(
+            PolicyConfig(fabric_staleness=FABRIC_STALENESS_DEFAULT)
+        ),
+    )
+    arb = FabricArbiter(
+        topo, cfg=ArbiterConfig(price_decay=PRICE_DECAY_DEFAULT)
+    )
     arb.register_runtime("skew", rt)
     arb.register("bg")
     arb.commit("bg", bg.resource_bytes)
@@ -371,12 +422,39 @@ def test_fabric_pressure_replans_stable_tenant(topo):
     assert all(r == "none" for r in reasons[:3])
 
 
-def test_fabric_pressure_off_by_default(topo):
-    """Without fabric_staleness, hints are recorded but never fire — the
-    no-behavior-change default for existing arbitrated deployments."""
+def test_fabric_pressure_on_by_default(topo):
+    """Arbitrated sessions ship with the calibrated soft deadline ON
+    (ISSUE 5 flips the PR-4 opt-in): a peer's load shift force-replans a
+    demand-stable tenant without any explicit policy config."""
+    from repro.api import FABRIC_STALENESS_DEFAULT, PRICE_DECAY_DEFAULT
+
     windows = 8
     trace = balanced_trace(N, windows)
     spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="t")
+    assert spec.policy_config().fabric_staleness == FABRIC_STALENESS_DEFAULT
+    assert spec.arbiter_config().price_decay == PRICE_DECAY_DEFAULT
+    with Session(spec) as sess:
+        assert sess.fabric.cfg.price_decay == PRICE_DECAY_DEFAULT
+        reasons = []
+        for w in range(windows):
+            if w == 2:
+                sess.join_static_tenant("peer", elephant(topo, mb=512.0))
+            reasons.append(sess.step(trace[w]).replan_reason)
+        assert sess.fabric.stats.price_hints >= 1
+    assert "fabric" in reasons, reasons
+    assert reasons.index("fabric") >= 2 + FABRIC_STALENESS_DEFAULT
+
+
+def test_fabric_pressure_opt_out_none(topo):
+    """``fabric_staleness=None`` / ``price_decay=None`` restore the raw
+    PR-4 opt-in behavior: hints are recorded but never fire, prices are
+    the raw ledger."""
+    windows = 8
+    trace = balanced_trace(N, windows)
+    spec = SessionSpec(topology=topo, adaptivity="arbitrated", tenant="t",
+                       fabric_staleness=None, price_decay=None)
+    assert spec.policy_config() is None
+    assert spec.arbiter_config().price_decay is None
     with Session(spec) as sess:
         for w in range(windows):
             if w == 2:
