@@ -11,20 +11,25 @@ writes the aggregate to benchmarks/results.csv.
   §V-E        bench_multitenant     background-tenant interference
   §III/V      bench_runtime_adapt   execution-time adaptation vs static/oracle
   (arbiter)   bench_fairness        multi-tenant arbitration + Jain fairness
+  (faults)    bench_faults          fault drills: flap/blackout/crash recovery
   (extra)     bench_kernels         kernel micro-benches
 
-``--smoke`` runs the planner-overhead, runtime-adaptation, and fairness
-sections in a few seconds and writes ``BENCH_algo_overhead.json`` /
-``BENCH_runtime_adapt.json`` / ``BENCH_fairness.json`` at the repo root,
-so planner-latency, adaptation, and arbitration regressions show up in the
-bench trajectory on every PR.  Two gates close the run: ``mutual_drift``
-validates the fairness JSON's mutual-drift section (schema + the >= 1.0x
-combined-drain threshold the calibrated price-recency defaults must hold,
-ISSUE 5), and ``session_api`` pushes one arbitrated two-tenant window
-through the ``repro.api.Session`` facade with the exported JSON validated
-against the ``nimble.fabric_fairness/v1`` schema (the full facade
-selfcheck — including the decayed-prices check — is ``python -m
-repro.api.selfcheck``).
+``--smoke`` runs the planner-overhead, runtime-adaptation, fairness, and
+fault-drill sections in a few seconds and writes
+``BENCH_algo_overhead.json`` / ``BENCH_runtime_adapt.json`` /
+``BENCH_fairness.json`` / ``BENCH_faults.json`` at the repo root, so
+planner-latency, adaptation, arbitration, and robustness regressions show
+up in the bench trajectory on every PR.  Three gates close the run:
+``mutual_drift`` validates the fairness JSON's mutual-drift section
+(schema + the >= 1.0x combined-drain threshold the calibrated
+price-recency defaults must hold, ISSUE 5), ``fault_drills`` validates the
+fault JSON against the recovery/availability thresholds of ISSUE 6
+(flap recovery <= 2 windows with bounded replans, blackout drain >= the
+static baseline, post-eviction survivor within 2% of never-joined), and
+``session_api`` pushes one arbitrated two-tenant window through the
+``repro.api.Session`` facade with the exported JSON validated against the
+``nimble.fabric_fairness/v1`` schema (the full facade selfcheck —
+including the decayed-prices check — is ``python -m repro.api.selfcheck``).
 """
 
 from __future__ import annotations
@@ -52,6 +57,7 @@ def smoke() -> None:
     from . import (
         bench_algo_overhead,
         bench_fairness,
+        bench_faults,
         bench_runtime_adapt,
         common,
     )
@@ -84,13 +90,31 @@ def smoke() -> None:
         f"# mutual_drift: win={md['win']:.4f}x (legacy "
         f"{md['win_legacy']:.4f}x) >= 1.0x OK"
     )
+    print("# --- faults (smoke) ---")
+    fault_metrics = bench_faults.smoke()
+    out4 = _write_metrics(
+        "BENCH_faults.json",
+        fault_metrics,
+        kind="bench_faults",
+    )
+    print("# --- fault_drills gate (smoke) ---")
+    # recovery/availability thresholds (ISSUE 6); raises on regression
+    bench_faults.validate_faults(fault_metrics)
+    print(
+        f"# fault_drills: flap recovery "
+        f"{fault_metrics['flap']['recovery_windows']}w, blackout "
+        f"{fault_metrics['blackout']['adaptive_static_ratio']:.3f}x static, "
+        f"survivor {fault_metrics['tenant_crash']['survivor_solo_ratio']:.4f}"
+        "x solo OK"
+    )
     print("# --- session_api (smoke) ---")
     from repro.api.selfcheck import smoke_session_check
 
     check = smoke_session_check()  # raises on schema violation
     print(f"# session_api: {check['summary']}")
     print(
-        f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}, {out3}"
+        f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}, "
+        f"{out3}, {out4}"
     )
 
 
@@ -99,6 +123,7 @@ def main() -> None:
         bench_algo_overhead,
         bench_alltoallv_skew,
         bench_fairness,
+        bench_faults,
         bench_kernels,
         bench_moe_e2e,
         bench_multitenant,
@@ -119,11 +144,13 @@ def main() -> None:
         ("vE_multitenant", bench_multitenant),
         ("runtime_adapt", bench_runtime_adapt),
         ("fairness", bench_fairness),
+        ("faults", bench_faults),
         ("kernels", bench_kernels),
     ]
     metric_files = {
         "runtime_adapt": ("BENCH_runtime_adapt.json", "bench_runtime_adapt"),
         "fairness": ("BENCH_fairness.json", "bench_fairness"),
+        "faults": ("BENCH_faults.json", "bench_faults"),
     }
     print("name,us_per_call,derived")
     for name, mod in sections:

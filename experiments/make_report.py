@@ -4,8 +4,9 @@
 
 Also appends the execution-time orchestration section when the repo root
 holds a ``BENCH_runtime_adapt.json`` (tagged ``nimble.bench_runtime_adapt``
-via the shared ``repro.jsonio`` schema), and the fabric-arbiter fairness
-section from ``BENCH_fairness.json`` (``nimble.bench_fairness``).
+via the shared ``repro.jsonio`` schema), the fabric-arbiter fairness
+section from ``BENCH_fairness.json`` (``nimble.bench_fairness``), and the
+fault-drill section from ``BENCH_faults.json`` (``nimble.bench_faults``).
 """
 
 import glob
@@ -170,6 +171,48 @@ def fairness_section():
         )
 
 
+def faults_section():
+    """Fault-drill table from BENCH_faults.json (DESIGN.md §9)."""
+    rec = _load_tagged("BENCH_faults.json", "bench_faults")
+    if rec is None:
+        return
+    print("\n### Fault drills (graceful degradation)\n")
+    print("| drill | windows | result |")
+    print("|---|---|---|")
+    fl = rec["flap"]
+    print(
+        f"| link flap | {fl['windows']} | {fl['flap_events']} events, "
+        f"{fl['topology_replans_backoff']} topology replans with backoff "
+        f"(vs {fl['topology_replans_storm']} without, "
+        f"{fl['suppressed_windows']} suppressed), recovered "
+        f"{fl['recovery_windows']} window(s) after the final restore, "
+        f"availability {fl['availability']:.2f} |"
+    )
+    bl = rec["blackout"]
+    print(
+        f"| telemetry blackout | {bl['windows']} | "
+        f"{bl['blackout_windows']}-window blackout across a drift phase: "
+        f"adaptive stayed {bl['adaptive_static_ratio']:.2f}x static on "
+        f"last-good demand, confidence back to "
+        f"{bl['confidence_end']:.2f}, availability "
+        f"{bl['availability']:.2f} |"
+    )
+    cr = rec["tenant_crash"]
+    print(
+        f"| tenant crash | {cr['windows']} | crash@w{cr['crash_window']}, "
+        f"{cr['evictions']} staleness eviction; survivor tail "
+        f"{cr['survivor_solo_ratio']:.4f}x the never-joined reference; "
+        f"double teardown "
+        f"{'OK' if cr['double_teardown_ok'] else 'FAILED'} |"
+    )
+    pt = rec["perturb"]
+    print(
+        f"| straggler+elephant+dropout | {pt['windows']} | straggler "
+        f"inflation {pt['straggler_ratio']:.2f}x visible, "
+        f"{pt['telemetry_rejected']} telemetry records rejected |"
+    )
+
+
 def main():
     base = load("*_16x16_nimble.json")
     opt = load("*_16x16_nimble_alt0.25_opt.json")
@@ -199,6 +242,7 @@ def main():
     multipod_status(mp)
     runtime_adapt_section()
     fairness_section()
+    faults_section()
 
 
 if __name__ == "__main__":

@@ -291,10 +291,11 @@ class Session:
             )
         return self.runtime
 
-    def step(self, demand):
+    def step(self, demand, **kw):
         """Advance the runtime loop one window (see
-        ``OrchestrationRuntime.step``)."""
-        return self._require_runtime().step(demand)
+        ``OrchestrationRuntime.step``).  Keyword arguments — the fault
+        drills' ``observed=`` / ``completion_scale=`` — pass through."""
+        return self._require_runtime().step(demand, **kw)
 
     def run_trace(self, trace, events=None) -> TraceResult:
         """Replay a ``[W, n, n]`` traffic trace.

@@ -18,6 +18,7 @@ from .incidence import PathIncidence, incidence_for, topology_fingerprint
 from .mcf import (
     Plan,
     congestion_lower_bound,
+    solve_degraded,
     solve_direct,
     solve_mwu,
     solve_static_striping,
@@ -37,7 +38,7 @@ from .topology import LinkCaps, Topology
 
 __all__ = [
     "Topology", "LinkCaps", "CostModel", "ResourceModel", "Plan",
-    "solve_mwu", "solve_direct", "solve_static_striping",
+    "solve_mwu", "solve_direct", "solve_static_striping", "solve_degraded",
     "congestion_lower_bound", "simulate", "simulate_nccl_rounds", "SimResult",
     "PlannerConfig", "plan_flows", "plan_flows_batch", "quantize_chunks",
     "plan_chunks_jit", "plan_chunks_batch_jit",

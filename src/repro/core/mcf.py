@@ -53,6 +53,17 @@ PairKey = Tuple[int, int]
 #: MWU herding on near-balanced traffic while staying fully vectorized
 _SUBSWEEPS = 8
 
+#: host-solver price tiers, mirroring the jitted planner's (planner.py):
+#: a relay candidate gated by the small-message threshold is priced at
+#: ``_BIG`` and a candidate crossing a *down* link at ``_BIG_DOWN`` —
+#: finite, so argmin degrades in tier order (healthy > gated-relay > dead
+#: path) instead of funneling early zero-cost assignments onto a dead link;
+#: structurally invalid candidates stay at +inf.  On a fabric with no down
+#: links a finite healthy candidate always exists (the direct path), so
+#: these tiers never change the argmin — plans stay bit-identical.
+_HOST_BIG = 1e30
+_HOST_BIG_DOWN = 1e32
+
 
 @dataclasses.dataclass
 class RoutedFlow:
@@ -70,6 +81,9 @@ class Plan:
     resource_bytes: np.ndarray   # effective bytes per resource
     link_bytes: np.ndarray       # raw payload bytes per link (first E entries)
     iterations: int
+    # degraded-mode provenance (DESIGN.md §9): True when this plan came
+    # from the survivor-striping fallback instead of a converged MWU solve
+    degraded: bool = False
 
     # -- aggregate metrics ------------------------------------------------------
     def max_normalized_load(self) -> float:
@@ -208,10 +222,21 @@ def _solve_mwu_sweep(
     cand_mask = pcand.mask[pair_ids]                    # [M, K, MC]
     cand_mult = pcand.mult[pair_ids].astype(np.float64)
     cand_pen = pcand.penalty[pair_ids].astype(np.float64)
-    # size-threshold policy: relay candidates priced out for small messages
-    gated = ~pcand.valid[pair_ids] | (
+    # tiered gating (mirrors the jitted planner): invalid candidates are
+    # +inf, small-message relays +_HOST_BIG, candidates crossing a down
+    # link +_HOST_BIG_DOWN — so dead paths lose to *any* live option even
+    # at zero accumulated load, instead of winning the first assignments
+    tier = np.where(pcand.valid[pair_ids], 0.0, np.inf)
+    tier += _HOST_BIG * (
         pcand.relay[pair_ids] & (res[:, None] <= cm.split_threshold)
     )
+    down = topo.down_link_ids()
+    if down:
+        down_res = np.zeros(inc.n_resources, dtype=bool)
+        down_res[np.asarray(down, dtype=np.int64)] = True
+        tier += _HOST_BIG_DOWN * (
+            (down_res[cand_rids] & cand_mask).any(axis=-1)
+        )
 
     caps = inc.caps
     sweeps: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
@@ -226,8 +251,8 @@ def _solve_mwu_sweep(
             pc = (
                 np.max(costs[cand_rids[batch]] * cand_mask[batch], axis=-1)
                 + cand_pen[batch]
+                + tier[batch]
             )                                           # [Mb, K]
-            pc = np.where(gated[batch], np.inf, pc)
             best_k = np.argmin(pc, axis=-1)             # [Mb]
             f = _quantized_fraction(res[batch], lam, eps)
             rids_sel = cand_rids[batch, best_k]         # [Mb, MC]
@@ -258,6 +283,10 @@ def _solve_mwu_sweep(
 
     routed = total - float(res.sum())
     if abs(routed - total) > 1e-6 * max(total, 1.0):
+        if topo.down_link_ids():
+            # degraded fabric: serve a survivor-striped plan instead of
+            # crashing the replan path (DESIGN.md §9)
+            return solve_degraded(topo, demands, cost_model)
         raise RuntimeError(
             f"MWU failed to route all demand: {routed} of {total} bytes"
         )
@@ -315,6 +344,8 @@ def _solve_mwu_sequential(
                 residual.pop(key)
     routed = sum(sum(fl.bytes for fl in v) for v in flows.values())
     if abs(routed - total) > 1e-6 * max(total, 1.0):
+        if topo.down_link_ids():
+            return solve_degraded(topo, demands, cost_model)
         raise RuntimeError(
             f"MWU failed to route all demand: {routed} of {total} bytes"
         )
@@ -388,6 +419,53 @@ def solve_static_striping(
             _route(loads, raw, rm, p, f)
             flows[key].append(RoutedFlow(p, f))
     return Plan(topo, rm, flows, loads, raw, 1)
+
+
+def solve_degraded(
+    topo: Topology,
+    demands: Mapping[PairKey, float],
+    cost_model: CostModel | None = None,
+) -> Plan:
+    """Survivor-striping fallback for a partially-dead fabric (DESIGN.md §9).
+
+    When a fault leaves MWU with no converging residual (every candidate
+    for some pair crosses a down link, or the iteration budget burns out
+    against near-zero capacities), the runtime still needs *a* plan — a
+    dead dataplane is strictly worse than an uneven one.  Each pair
+    stripes evenly across its candidates that avoid every down link; a
+    pair with no surviving candidate routes on the single candidate with
+    the largest bottleneck capacity (least-dead path).  The returned plan
+    is flagged ``degraded=True`` so reports and drills can tell a fallback
+    from a converged solve.
+    """
+    rm = ResourceModel(topo, cost_model)
+    path_table = all_pairs_paths(topo)
+    down = set(topo.down_link_ids())
+    loads = np.zeros(rm.n_resources, dtype=np.float64)
+    raw = np.zeros(topo.n_links, dtype=np.float64)
+    flows: Dict[PairKey, List[RoutedFlow]] = {}
+    for key, d in demands.items():
+        if d <= 0 or key[0] == key[1]:
+            continue
+        cands = path_table[key]
+        alive = [
+            p for p in cands if not any(l in down for l in p.links)
+        ]
+        if not alive:
+            alive = [
+                max(
+                    cands,
+                    key=lambda p: min(
+                        topo.links[l].capacity for l in p.links
+                    ),
+                )
+            ]
+        share = float(d) / len(alive)
+        flows[key] = []
+        for p in alive:
+            _route(loads, raw, rm, p, share)
+            flows[key].append(RoutedFlow(p, share))
+    return Plan(topo, rm, flows, loads, raw, 1, degraded=True)
 
 
 # -- plan bridges (orchestration runtime) ---------------------------------------

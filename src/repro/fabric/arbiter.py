@@ -87,6 +87,13 @@ class ArbiterConfig:
     # other tenant's solve.  None = raw ledger prices, byte-identical to
     # the undecayed arbiter; unstamped (host) commits never decay.
     price_decay: Optional[float] = None
+    # crash eviction (DESIGN.md §9): a tenant whose last commit is at
+    # least this many fabric windows stale has stopped heartbeating and is
+    # unregistered outright — its ledger entry withdrawn so survivors stop
+    # pricing around a ghost.  None disables (a silent tenant is only ever
+    # faded by price_decay, never dropped).  Unstamped (host) commits have
+    # no staleness and are never evicted.
+    evict_staleness: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -99,6 +106,7 @@ class ArbiterStats:
     commits: int = 0       # ledger commits
     price_hints: int = 0   # "prices moved" hints published
     reprices: int = 0      # swap-boundary re-price verdicts (stale pendings)
+    evictions: int = 0     # tenants dropped for heartbeat staleness
 
     def to_json_obj(self) -> dict:
         return tag("fabric_arbiter_stats", dataclasses.asdict(self))
@@ -225,7 +233,14 @@ class FabricArbiter:
         return name
 
     def unregister(self, name: str) -> None:
-        """Drop a tenant: withdraw its load, unbind, unsubscribe."""
+        """Drop a tenant: withdraw its load, unbind, unsubscribe.
+
+        **Idempotent** (pinned by ``tests/test_faults.py``): unregistering
+        a name that is unknown — or already unregistered by a racing
+        teardown path (session close vs. staleness eviction) — is a no-op
+        end to end; every sub-step tolerates the missing entry, including
+        ``FabricState.withdraw``.
+        """
         self._tenants.pop(name, None)
         self._gates.pop(name, None)
         self.state.withdraw(name)
@@ -327,6 +342,29 @@ class FabricArbiter:
         )
         self.stats.commits += 1
         self._maybe_publish_price_hint(name)
+        self._maybe_evict()
+
+    def _maybe_evict(self) -> None:
+        """Unregister tenants whose heartbeat went stale (DESIGN.md §9).
+
+        Piggybacked on :meth:`commit` — a live tenant's heartbeat is what
+        advances the fabric clock, so eviction needs no timer of its own.
+        A crashed tenant's committed load first fades under ``price_decay``
+        (survivors gradually stop routing around it) and is withdrawn
+        outright once ``evict_staleness`` windows pass with no commit;
+        ``unregister`` makes a later teardown of the crashed session a
+        harmless double-unregister.
+        """
+        threshold = self.cfg.evict_staleness
+        if threshold is None:
+            return
+        stale = [
+            t for t in self._tenants
+            if (s := self.state.staleness(t)) is not None and s >= threshold
+        ]
+        for t in stale:
+            self.unregister(t)
+            self.stats.evictions += 1
 
     def _maybe_publish_price_hint(
         self, committer: str, require_peers: bool = True

@@ -115,6 +115,14 @@ class FabricState:
             self._clock = max(self._clock, int(window))
 
     def withdraw(self, tenant: str) -> None:
+        """Remove ``tenant``'s ledger entry (load and stamp).
+
+        Withdrawing an unknown — or already-withdrawn — tenant is a
+        documented **no-op**, not an error: teardown paths race (session
+        close vs. arbiter staleness eviction vs. explicit unregister), and
+        "this tenant contributes nothing to the ledger" is already true.
+        Pinned by ``tests/test_faults.py``.
+        """
         self._committed.pop(tenant, None)
         self._stamp.pop(tenant, None)
 

@@ -165,6 +165,12 @@ class RuntimeConfig:
     signature_levels: int = 8      # demand-signature quantization resolution
     cache_capacity: int = 64       # LRU entries in the plan cache
     telemetry_windows: int = 256   # ring-buffer capacity
+    # pending-plan watchdog (DESIGN.md §9): a buffered plan older than this
+    # many windows past its issue is abandoned and re-solved against live
+    # state instead of swapping in stale.  Healthy pendings become ready
+    # after at most solve_delay_windows + 1, so the default never fires in
+    # normal operation; None disables the watchdog entirely.
+    pending_deadline_windows: Optional[int] = 8
 
 
 @dataclasses.dataclass
@@ -184,7 +190,7 @@ class PlanHandle:
     signature: tuple
     version: int
     solved_window: int
-    source: str            # "initial" | "solve" | "cache" | "reprice"
+    source: str   # "initial" | "solve" | "cache" | "reprice" | "watchdog"
     baseline_ratio: float  # Z/Z* on its own solve demand, for the policy
     solved_demand: Optional[np.ndarray] = None
     solved_prices: Optional[np.ndarray] = None
@@ -225,6 +231,7 @@ class RuntimeStats:
     swaps: int = 0
     events: int = 0
     reprices: int = 0       # stale pendings re-solved on live prices at swap
+    watchdog_abandons: int = 0   # pendings past deadline, re-solved live
 
     def to_json_obj(self) -> dict:
         return tag("runtime_stats", dataclasses.asdict(self))
@@ -543,10 +550,43 @@ class OrchestrationRuntime:
         solve per replan and can never starve the dataplane of swaps.
         Refines never charge the admission gate — they complete an
         already-admitted replan rather than issuing a new one.
+
+        A **pending-plan watchdog** (DESIGN.md §9) guards the issue-to-swap
+        path: a pending whose solve is older than
+        ``pending_deadline_windows`` describes a fabric that no longer
+        exists (window-clock jumps via ``observe_dispatch``, drill-scale
+        solve delays), so it is abandoned and the live estimate re-solved
+        in its place rather than swapped in stale.  Watchdog-issued
+        pendings are exempt from re-abandonment so a slow solver degrades
+        to periodic refresh instead of livelock.
         """
-        if self._pending is None or self._pending[1] > window:
+        if self._pending is None:
             return False
-        handle = self._pending[0]
+        handle, ready = self._pending
+        deadline = self.cfg.pending_deadline_windows
+        if (
+            deadline is not None
+            and handle.source != "watchdog"
+            and window - handle.solved_window > deadline
+        ):
+            self.stats.watchdog_abandons += 1
+            live = (
+                self.estimator.predict()
+                if self.estimator.initialized
+                else handle.solved_demand
+            )
+            wd_handle, cache_hit = self._solve_handle(
+                live, window, "watchdog"
+            )
+            self._pending = (
+                wd_handle,
+                window + (
+                    1 if cache_hit else max(1, self.cfg.solve_delay_windows)
+                ),
+            )
+            return False
+        if ready > window:
+            return False
         self._pending = None
         if (
             self._arbiter is not None
@@ -586,10 +626,30 @@ class OrchestrationRuntime:
         self.stats.replans += 1
         return handle, cache_hit
 
-    def step(self, demand: np.ndarray) -> WindowReport:
-        """Advance one window: execute, observe, predict, decide, buffer."""
+    _OBS_UNSET = object()   # sentinel: "telemetry observed the demand as-is"
+
+    def step(
+        self,
+        demand: np.ndarray,
+        *,
+        observed=_OBS_UNSET,
+        completion_scale: float = 1.0,
+    ) -> WindowReport:
+        """Advance one window: execute, observe, predict, decide, buffer.
+
+        ``observed`` is what telemetry *saw* this window when that differs
+        from the executed demand (fault drills, DESIGN.md §9): ``None``
+        models a full telemetry blackout (the estimator keeps serving its
+        last-good prediction with decayed confidence), a partial array may
+        carry NaN entries for dropped counters.  ``completion_scale``
+        inflates the measured completion time (straggler windows) without
+        touching the routed bytes.  Defaults are bit-identical to the
+        pre-fault-harness behavior.
+        """
         w = self._window
         demand = np.asarray(demand, dtype=np.float64)
+        if observed is OrchestrationRuntime._OBS_UNSET:
+            observed = demand
 
         due = self.events.pop_due(w)
         if due:
@@ -602,7 +662,16 @@ class OrchestrationRuntime:
             self._active.plan, dem, topo=self.topo, cost_model=self.cm
         )
         sim = simulate(exec_plan, self.cfg.chunk_bytes)
-        self.telemetry.record(w, sim, pair_bytes=demand)
+        # telemetry stores only clean pair observations; partial (NaN) and
+        # blackout windows record the resource counters with no pair bytes
+        pair_obs = (
+            observed
+            if observed is not None and np.isfinite(observed).all()
+            else None
+        )
+        self.telemetry.record(
+            w, sim, pair_bytes=pair_obs, completion_scale=completion_scale
+        )
         if self._arbiter is not None:
             # telemetry export: this window's realized per-resource loads
             # become this tenant's committed load in the shared ledger —
@@ -615,8 +684,9 @@ class OrchestrationRuntime:
                 fingerprint=self.topo.fingerprint,
             )
 
-        # estimate next-window demand and evaluate the triggers
-        self.estimator.update(demand)
+        # estimate next-window demand and evaluate the triggers (the
+        # estimator degrades gracefully on None / NaN-masked observations)
+        self.estimator.update(observed)
         predicted = self.estimator.predict()
         ratio = self._ratio(self._active.plan, predicted)
         decision: ReplanDecision = self.policy.decide(
@@ -659,7 +729,7 @@ class OrchestrationRuntime:
         self._window += 1
         return WindowReport(
             window=w,
-            completion_s=float(sim.completion_time),
+            completion_s=float(sim.completion_time) * completion_scale,
             payload_bytes=float(sim.total_payload),
             bandwidth_gbs=sim.bandwidth_gbs(),
             bottleneck=sim.bottleneck_kind(exec_plan),

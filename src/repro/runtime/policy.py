@@ -42,6 +42,26 @@ mutual-drift scenarios in ``benchmarks/bench_fairness.py``).  The trigger
 covers tenants with *no* replan in flight; the complementary issue→swap
 staleness window is closed by the controller's swap-boundary re-pricing
 (``OrchestrationRuntime._maybe_swap`` + ``FabricArbiter.reprice``).
+
+**Flap backoff** (DESIGN.md §9).  "Topology events always replan" is the
+right reflex for a single failure and a replan storm under a *flapping*
+link: every down/restore pair would force a fresh solve, churning the
+plan cache and the fabric's priced equilibrium faster than either can
+converge.  Topology triggers therefore carry an exponential backoff:
+after a topology-triggered replan at window *w* with backoff *b*,
+further topology events before *w + b* are **suppressed** with
+``reason="backoff"`` (the controller still rebuilds its tables — the
+fabric view stays truthful — it just keeps serving the current plan's
+split ratios on the degraded capacities).  Consecutive topology fires
+inside ``flap_reset_windows`` of each other grow the backoff
+geometrically (``flap_backoff_base * flap_backoff_factor ** level``, cap
+``flap_backoff_max``); a quiet stretch resets it, so an isolated failure
+months after a flap train replans immediately again.  A suppressed event
+is **deferred, never dropped**: the first ``decide`` at or past the
+backoff horizon fires a catch-up ``reason="topology"`` replan against
+live state, which is how the fabric re-optimizes after the final restore
+of a flap train.  The replan count under an F-event flap train is thus
+O(log F + duration / cap) instead of F.
 """
 
 from __future__ import annotations
@@ -62,15 +82,29 @@ class PolicyConfig:
     # (hand-wired default — arbitrated Sessions pass the calibrated
     # repro.api.FABRIC_STALENESS_DEFAULT instead)
     fabric_staleness: Optional[int] = None
+    # flap-aware exponential backoff on topology triggers: after a
+    # topology replan, further topology events inside the backoff window
+    # are suppressed (reason="backoff") and deferred.  base=0 disables
+    # (every topology event replans immediately — the pre-backoff
+    # behavior).  The default base of 1 is invisible to isolated events:
+    # a single down (or down+restore a few windows apart) still replans
+    # immediately; only rapid-fire trains hit the growing backoff.
+    flap_backoff_base: int = 1
+    flap_backoff_factor: float = 2.0
+    flap_backoff_max: int = 8
+    # a topology-quiet stretch of more than this many windows resets the
+    # backoff level, so the next isolated event replans immediately again
+    flap_reset_windows: int = 16
 
 
 @dataclasses.dataclass(frozen=True)
 class ReplanDecision:
     replan: bool
-    # "topology" | "congestion" | "staleness" | "fabric" | "none"; an
-    # arbitrated controller may rewrite a positive decision to
+    # "topology" | "congestion" | "staleness" | "fabric" | "backoff" |
+    # "none"; an arbitrated controller may rewrite a positive decision to
     # replan=False with reason "gated" when the fabric admission gate
-    # throttles the tenant
+    # throttles the tenant.  "backoff" marks a topology event suppressed
+    # by the flap backoff (replan deferred to the backoff horizon).
     reason: str
     ratio: float
     threshold: float
@@ -85,6 +119,14 @@ class ReplanPolicy:
         self._armed = True
         self._last_trigger: Optional[int] = None
         self._pressure_window: Optional[int] = None
+        # flap-backoff state: current escalation level, the window until
+        # which topology triggers are suppressed, the last topology fire
+        # (for quiet-period reset), and whether a suppressed event is
+        # waiting for a deferred catch-up replan
+        self._flap_level = 0
+        self._topo_block_until: Optional[int] = None
+        self._last_topo_fire: Optional[int] = None
+        self._deferred_topo = False
 
     def decide(
         self,
@@ -108,7 +150,19 @@ class ReplanPolicy:
         cfg = self.cfg
         threshold = baseline_ratio * cfg.degrade_factor
         if topology_event:
-            self._fired(window)
+            if self._flap_blocked(window):
+                # flap backoff: suppress the replan storm, defer the
+                # catch-up solve to the backoff horizon
+                self._deferred_topo = True
+                return ReplanDecision(False, "backoff", ratio, threshold)
+            self._fire_topology(window)
+            return ReplanDecision(True, "topology", ratio, threshold)
+        if self._deferred_topo and not self._flap_blocked(window):
+            # the backoff horizon passed with a suppressed event on the
+            # books: catch-up replan against live state (this is how the
+            # fabric re-optimizes after a flap train's final restore)
+            self._deferred_topo = False
+            self._fire_topology(window)
             return ReplanDecision(True, "topology", ratio, threshold)
         if pending:
             return ReplanDecision(False, "none", ratio, threshold)
@@ -147,6 +201,44 @@ class ReplanPolicy:
         self._armed = False
         self._breach = 0
         self._last_trigger = window
+
+    # -- flap backoff ----------------------------------------------------------
+    def _flap_blocked(self, window: int) -> bool:
+        """Inside the topology-trigger backoff window?"""
+        return (
+            self.cfg.flap_backoff_base > 0
+            and self._topo_block_until is not None
+            and window < self._topo_block_until
+        )
+
+    def _fire_topology(self, window: int) -> None:
+        """Record a topology-triggered replan and arm the next backoff.
+
+        Fires inside ``flap_reset_windows`` of the previous one escalate
+        the backoff level (geometric growth toward ``flap_backoff_max``);
+        a longer quiet period resets to the base, so isolated failures
+        keep replanning immediately.
+        """
+        cfg = self.cfg
+        if cfg.flap_backoff_base > 0:
+            if (
+                self._last_topo_fire is not None
+                and window - self._last_topo_fire <= cfg.flap_reset_windows
+            ):
+                self._flap_level += 1
+            else:
+                self._flap_level = 0
+            backoff = min(
+                cfg.flap_backoff_base
+                * cfg.flap_backoff_factor ** self._flap_level,
+                float(cfg.flap_backoff_max),
+            )
+            self._topo_block_until = window + int(round(backoff))
+        self._last_topo_fire = window
+        # a direct fire subsumes any deferred catch-up: the solve it
+        # triggers already sees the latest topology
+        self._deferred_topo = False
+        self._fired(window)
 
     def notify_swap(self, solved_window: Optional[int] = None) -> None:
         """Re-arm when a new plan becomes active.

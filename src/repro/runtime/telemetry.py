@@ -82,16 +82,25 @@ class LinkTelemetry:
         self._window_id = np.full(W, -1, dtype=np.int64)
         self._pairs: List[Optional[np.ndarray]] = [None] * W
         self._count = 0   # total records ever written
+        self.rejected = 0  # malformed load records refused (NaN/negative)
 
     # -- recording -------------------------------------------------------------
-    def record(self, window: int, sim, pair_bytes: Optional[np.ndarray] = None
-               ) -> None:
-        """Harvest a :class:`~repro.core.fabsim.SimResult` for one window."""
+    def record(self, window: int, sim, pair_bytes: Optional[np.ndarray] = None,
+               completion_scale: float = 1.0) -> None:
+        """Harvest a :class:`~repro.core.fabsim.SimResult` for one window.
+
+        ``completion_scale`` stretches the measured busy/completion times
+        (straggler windows, DESIGN.md §9) without touching utilization —
+        the fabric did the same work, it just took longer.
+        """
         self._write(
             window,
-            per_resource_time=np.asarray(sim.per_resource_time, dtype=np.float64),
+            per_resource_time=(
+                np.asarray(sim.per_resource_time, dtype=np.float64)
+                * completion_scale
+            ),
             per_resource_util=np.asarray(sim.per_resource_util, dtype=np.float64),
-            completion_s=float(sim.completion_time),
+            completion_s=float(sim.completion_time) * completion_scale,
             payload=float(sim.total_payload),
             bottleneck=int(sim.bottleneck_resource),
             pair_bytes=pair_bytes,
@@ -109,6 +118,13 @@ class LinkTelemetry:
         window "completion" is the slowest resource (the plan's objective Z).
         ``window=None`` self-numbers with the record count (useful when
         several producers share one sink and none owns a window clock).
+
+        A shape mismatch is a caller bug and raises; NaN/Inf/negative
+        entries are *producer corruption* (a crashed counter, a torn read)
+        and are **rejected whole** — the record is dropped and ``rejected``
+        incremented, so one poisoned window can never contaminate
+        ``mean_util`` / ``utilization_imbalance`` for everything behind it
+        in the ring.
         """
         loads = np.asarray(resource_bytes, dtype=np.float64)
         if loads.shape != (self.n_resources,):
@@ -116,6 +132,9 @@ class LinkTelemetry:
                 f"loads shape {loads.shape} != ({self.n_resources},) — the "
                 "producer's topology disagrees with this telemetry sink's"
             )
+        if not np.isfinite(loads).all() or (loads < 0).any():
+            self.rejected += 1
+            return
         drain = loads / self.capacity_bps
         t = float(drain.max()) if len(drain) else 0.0
         util = drain / t if t > 0 else np.zeros_like(drain)
@@ -211,6 +230,7 @@ class LinkTelemetry:
                 "payload_bytes_total": float(self._payload[idx].sum()),
                 "utilization_imbalance": self.utilization_imbalance(last_k),
                 "util_mean_busy": _mean_busy(self.mean_util(last_k)),
+                "rejected_records": int(self.rejected),
             },
         )
 
