@@ -12,24 +12,35 @@ writes the aggregate to benchmarks/results.csv.
   §III/V      bench_runtime_adapt   execution-time adaptation vs static/oracle
   (arbiter)   bench_fairness        multi-tenant arbitration + Jain fairness
   (faults)    bench_faults          fault drills: flap/blackout/crash recovery
+  (serve)     bench_serve           serving control plane: scenario SLO drills
   (extra)     bench_kernels         kernel micro-benches
 
-``--smoke`` runs the planner-overhead, runtime-adaptation, fairness, and
-fault-drill sections in a few seconds and writes
-``BENCH_algo_overhead.json`` / ``BENCH_runtime_adapt.json`` /
-``BENCH_fairness.json`` / ``BENCH_faults.json`` at the repo root, so
-planner-latency, adaptation, arbitration, and robustness regressions show
-up in the bench trajectory on every PR.  Three gates close the run:
-``mutual_drift`` validates the fairness JSON's mutual-drift section
-(schema + the >= 1.0x combined-drain threshold the calibrated
-price-recency defaults must hold, ISSUE 5), ``fault_drills`` validates the
-fault JSON against the recovery/availability thresholds of ISSUE 6
-(flap recovery <= 2 windows with bounded replans, blackout drain >= the
-static baseline, post-eviction survivor within 2% of never-joined), and
+``--smoke`` runs the planner-overhead, runtime-adaptation, fairness,
+fault-drill, and serving-control-plane sections in a few seconds and
+writes ``BENCH_algo_overhead.json`` / ``BENCH_runtime_adapt.json`` /
+``BENCH_fairness.json`` / ``BENCH_faults.json`` / ``BENCH_serve.json`` at
+the repo root, so planner-latency, adaptation, arbitration, robustness,
+and serving-SLO regressions show up in the bench trajectory on every PR.
+Four gates close the run: ``mutual_drift`` validates the fairness JSON's
+mutual-drift section (schema + the >= 1.0x combined-drain threshold the
+calibrated price-recency defaults must hold, ISSUE 5), ``fault_drills``
+validates the fault JSON against the recovery/availability thresholds of
+ISSUE 6 (flap recovery <= 2 windows with bounded replans, blackout drain
+>= the static baseline, post-eviction survivor within 2% of
+never-joined), ``serve_slo`` validates the serving scenarios of ISSUE 7
+(every scenario holds its declared SLOs; steady parity >= 0.99x;
+elephant_victim and flap_under_load beat static on combined drain; churn
+leaves the survivor's steady state within 2% of a never-churned run), and
 ``session_api`` pushes one arbitrated two-tenant window through the
 ``repro.api.Session`` facade with the exported JSON validated against the
 ``nimble.fabric_fairness/v1`` schema (the full facade selfcheck —
-including the decayed-prices check — is ``python -m repro.api.selfcheck``).
+including the serving check 6 — is ``python -m repro.api.selfcheck``).
+
+Every ``--smoke`` run also appends one timestamped ``trajectory/`` row to
+``benchmarks/results.csv`` — gate verdicts plus the headline metric from
+each ``BENCH_*.json`` — so the repo-level trajectory accumulates across
+PRs instead of living only in the per-run JSONs (full ``main()`` runs
+rewrite the bench rows but preserve the accumulated trajectory rows).
 """
 
 from __future__ import annotations
@@ -53,24 +64,70 @@ def _write_metrics(fname: str, metrics: dict, kind: str | None = None) -> str:
     return out
 
 
+RESULTS_CSV = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results.csv")
+CSV_HEADER = "name,us_per_call,derived\n"
+
+
+def _append_trajectory_row(gates: dict, headline: dict) -> str:
+    """Append one timestamped ``trajectory/`` row to benchmarks/results.csv.
+
+    The row carries the gate verdicts plus one headline metric per
+    ``BENCH_*.json`` so the repo accumulates a cross-PR trend line that
+    survives full ``main()`` rewrites.  The derived field is
+    space-separated ``k=v`` pairs — no commas, it lives in a CSV cell.
+    """
+    import datetime
+
+    stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
+        "%Y-%m-%dT%H:%M:%SZ"
+    )
+    verdicts = "+".join(
+        f"{name}:{'pass' if ok else 'FAIL'}" for name, ok in gates.items()
+    )
+    parts = [f"gates={verdicts}"]
+    parts += [f"{k}={v}" for k, v in headline.items()]
+    derived = " ".join(parts)
+    if "," in derived:
+        raise ValueError(f"trajectory derived field grew a comma: {derived!r}")
+    fresh = not os.path.exists(RESULTS_CSV)
+    with open(RESULTS_CSV, "a") as f:
+        if fresh:
+            f.write(CSV_HEADER)
+        f.write(f"trajectory/{stamp},0.000,{derived}\n")
+    return stamp
+
+
 def smoke() -> None:
     from . import (
         bench_algo_overhead,
         bench_fairness,
         bench_faults,
         bench_runtime_adapt,
+        bench_serve,
         common,
     )
 
+    gates: dict = {}
+    gate_errors: list = []
+
+    def _gate(name: str, fn) -> None:
+        try:
+            fn()
+            gates[name] = True
+        except Exception as exc:  # record, log trajectory, re-raise below
+            gates[name] = False
+            gate_errors.append((name, exc))
+
     print("name,us_per_call,derived")
     print("# --- table1_overhead (smoke) ---")
-    out = _write_metrics(
-        "BENCH_algo_overhead.json", bench_algo_overhead.smoke()
-    )
+    algo_metrics = bench_algo_overhead.smoke()
+    out = _write_metrics("BENCH_algo_overhead.json", algo_metrics)
     print("# --- runtime_adapt (smoke) ---")
+    adapt_metrics = bench_runtime_adapt.smoke()
     out2 = _write_metrics(
         "BENCH_runtime_adapt.json",
-        bench_runtime_adapt.smoke(),
+        adapt_metrics,
         kind="bench_runtime_adapt",
     )
     print("# --- fairness (smoke) ---")
@@ -84,11 +141,17 @@ def smoke() -> None:
     # schema + threshold gate (ISSUE 5): the calibrated recency defaults
     # must keep the mutual-drift scenario at >= 1.0x combined drain vs the
     # unpriced baseline; raises on regression
-    bench_fairness.validate_mutual_drift(fairness_metrics["mutual_drift"])
+    _gate(
+        "mutual_drift",
+        lambda: bench_fairness.validate_mutual_drift(
+            fairness_metrics["mutual_drift"]
+        ),
+    )
     md = fairness_metrics["mutual_drift"]
     print(
         f"# mutual_drift: win={md['win']:.4f}x (legacy "
-        f"{md['win_legacy']:.4f}x) >= 1.0x OK"
+        f"{md['win_legacy']:.4f}x) >= 1.0x "
+        f"{'OK' if gates['mutual_drift'] else 'FAIL'}"
     )
     print("# --- faults (smoke) ---")
     fault_metrics = bench_faults.smoke()
@@ -99,23 +162,62 @@ def smoke() -> None:
     )
     print("# --- fault_drills gate (smoke) ---")
     # recovery/availability thresholds (ISSUE 6); raises on regression
-    bench_faults.validate_faults(fault_metrics)
+    _gate("fault_drills", lambda: bench_faults.validate_faults(fault_metrics))
     print(
         f"# fault_drills: flap recovery "
         f"{fault_metrics['flap']['recovery_windows']}w, blackout "
         f"{fault_metrics['blackout']['adaptive_static_ratio']:.3f}x static, "
         f"survivor {fault_metrics['tenant_crash']['survivor_solo_ratio']:.4f}"
-        "x solo OK"
+        f"x solo {'OK' if gates['fault_drills'] else 'FAIL'}"
+    )
+    print("# --- serve (smoke) ---")
+    serve_metrics = bench_serve.smoke()
+    out5 = _write_metrics("BENCH_serve.json", serve_metrics, kind="serve")
+    print("# --- serve_slo gate (smoke) ---")
+    # scenario SLOs + adaptive-vs-static thresholds (ISSUE 7); raises on
+    # any scenario missing its declared gates
+    _gate("serve_slo", lambda: bench_serve.validate_serve(serve_metrics))
+    print(
+        f"# serve_slo: steady {serve_metrics['steady']['win']:.4f}x, "
+        f"elephant {serve_metrics['elephant_victim']['win']:.4f}x, flap "
+        f"{serve_metrics['flap_under_load']['win']:.4f}x static; churn tail "
+        f"{serve_metrics['churn']['tail_ratio']:.4f}x control "
+        f"{'OK' if gates['serve_slo'] else 'FAIL'}"
     )
     print("# --- session_api (smoke) ---")
     from repro.api.selfcheck import smoke_session_check
 
-    check = smoke_session_check()  # raises on schema violation
-    print(f"# session_api: {check['summary']}")
+    check: dict = {}
+
+    def _session_gate() -> None:
+        check.update(smoke_session_check())  # raises on schema violation
+
+    _gate("session_api", _session_gate)
+    print(f"# session_api: {check.get('summary', 'FAILED')}")
+
+    headline = {
+        "host_speedup": f"{algo_metrics['host_speedup']:.2f}x",
+        "drift_speedup": f"{adapt_metrics['drift']['adaptive_speedup']:.3f}x",
+        "mutual_drift_win": f"{md['win']:.4f}x",
+        "four_tenant_jain": f"{fairness_metrics['four_tenant']['jain_index']:.4f}",
+        "flap_recovery": f"{fault_metrics['flap']['recovery_windows']}w",
+        "crash_survivor": (
+            f"{fault_metrics['tenant_crash']['survivor_solo_ratio']:.4f}x"
+        ),
+        "serve_steady": f"{serve_metrics['steady']['win']:.4f}x",
+        "serve_elephant": f"{serve_metrics['elephant_victim']['win']:.4f}x",
+        "serve_flap": f"{serve_metrics['flap_under_load']['win']:.4f}x",
+        "serve_churn_tail": f"{serve_metrics['churn']['tail_ratio']:.4f}x",
+    }
+    stamp = _append_trajectory_row(gates, headline)
+    print(f"# trajectory: appended {stamp} row to {RESULTS_CSV}")
     print(
         f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}, "
-        f"{out3}, {out4}"
+        f"{out3}, {out4}, {out5}"
     )
+    if gate_errors:
+        name, exc = gate_errors[0]
+        raise RuntimeError(f"smoke gate {name!r} failed: {exc}") from exc
 
 
 def main() -> None:
@@ -131,6 +233,7 @@ def main() -> None:
         bench_p2p_inter,
         bench_p2p_intra,
         bench_runtime_adapt,
+        bench_serve,
         common,
     )
 
@@ -145,12 +248,14 @@ def main() -> None:
         ("runtime_adapt", bench_runtime_adapt),
         ("fairness", bench_fairness),
         ("faults", bench_faults),
+        ("serve", bench_serve),
         ("kernels", bench_kernels),
     ]
     metric_files = {
         "runtime_adapt": ("BENCH_runtime_adapt.json", "bench_runtime_adapt"),
         "fairness": ("BENCH_fairness.json", "bench_fairness"),
         "faults": ("BENCH_faults.json", "bench_faults"),
+        "serve": ("BENCH_serve.json", "serve"),
     }
     print("name,us_per_call,derived")
     for name, mod in sections:
@@ -159,12 +264,23 @@ def main() -> None:
         if name in metric_files and metrics:
             fname, kind = metric_files[name]
             _write_metrics(fname, metrics, kind=kind)
-    out = os.path.join(os.path.dirname(__file__), "results.csv")
-    with open(out, "w") as f:
-        f.write("name,us_per_call,derived\n")
+    # rewrite the bench rows but carry over the accumulated cross-PR
+    # trajectory rows --smoke appends
+    trajectory: list = []
+    if os.path.exists(RESULTS_CSV):
+        with open(RESULTS_CSV) as f:
+            trajectory = [
+                line for line in f if line.startswith("trajectory/")
+            ]
+    with open(RESULTS_CSV, "w") as f:
+        f.write(CSV_HEADER)
         for row in common.ROWS:
             f.write(f"{row[0]},{row[1]:.3f},{row[2]}\n")
-    print(f"# wrote {len(common.ROWS)} rows to {out}")
+        f.writelines(trajectory)
+    print(
+        f"# wrote {len(common.ROWS)} rows to {RESULTS_CSV} "
+        f"(+{len(trajectory)} trajectory rows preserved)"
+    )
 
 
 if __name__ == "__main__":

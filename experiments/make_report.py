@@ -5,8 +5,10 @@
 Also appends the execution-time orchestration section when the repo root
 holds a ``BENCH_runtime_adapt.json`` (tagged ``nimble.bench_runtime_adapt``
 via the shared ``repro.jsonio`` schema), the fabric-arbiter fairness
-section from ``BENCH_fairness.json`` (``nimble.bench_fairness``), and the
-fault-drill section from ``BENCH_faults.json`` (``nimble.bench_faults``).
+section from ``BENCH_fairness.json`` (``nimble.bench_fairness``), the
+fault-drill section from ``BENCH_faults.json`` (``nimble.bench_faults``),
+and the serving-control-plane SLO table from ``BENCH_serve.json``
+(``nimble.serve``, DESIGN.md §10).
 """
 
 import glob
@@ -213,6 +215,46 @@ def faults_section():
     )
 
 
+def serve_section():
+    """Serving control-plane SLO table from BENCH_serve.json (§10)."""
+    rec = _load_tagged("BENCH_serve.json", "serve")
+    if rec is None:
+        return
+    print("\n### Serving control plane (scenario SLO drills)\n")
+    print("| scenario | windows | tenants | SLO | adaptive vs static "
+          "| Jain | availability |")
+    print("|---|---|---|---|---|---|---|")
+    for name in ("steady", "elephant_victim", "flap_under_load"):
+        s = rec.get(name)
+        if s is None:
+            continue
+        rec_w = s.get("recovery_windows")
+        extra = f", recovery {rec_w}w" if rec_w is not None else ""
+        print(
+            f"| {name} | {s['windows']} | {s['tenants']} "
+            f"| {'PASS' if s['slo_pass'] else 'FAIL'} | {s['win']:.3f}x "
+            f"| {s['jain']:.3f} | {s['availability']:.3f}{extra} |"
+        )
+    ch = rec.get("churn")
+    if ch is not None:
+        print(
+            f"\nchurn storm ({ch['windows']}w, {ch['churned_tenants']} "
+            f"scavengers, last leave w{ch['last_leave_window']}): survivor "
+            f"steady-state {ch['tail_ratio']:.4f}x the never-churned "
+            f"control (gate |r-1| <= 0.02), whole run "
+            f"{ch['total_ratio']:.4f}x (gate <= 1.02)"
+        )
+    gates = rec.get("steady", {}).get("gates")
+    if gates:
+        print(
+            "\nsteady gate values: "
+            + ", ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in sorted(gates.items())
+            )
+        )
+
+
 def main():
     base = load("*_16x16_nimble.json")
     opt = load("*_16x16_nimble_alt0.25_opt.json")
@@ -243,6 +285,7 @@ def main():
     runtime_adapt_section()
     fairness_section()
     faults_section()
+    serve_section()
 
 
 if __name__ == "__main__":

@@ -15,7 +15,12 @@ this environment:
   5. **decay**      — price recency (ISSUE 5): stamped peer loads fade
      monotonically as the fabric clock runs past them, unstamped (host)
      commits never decay, and ``price_decay=None`` exports the raw ledger
-     byte-identically.
+     byte-identically;
+  6. **serve**      — the serving control plane (ISSUE 7, DESIGN.md §10)
+     runs the registry's ``minimal`` two-tenant scenario end-to-end
+     through both arms, the scenario survives a JSON round-trip
+     bit-exactly, and the exported report validates against the
+     ``nimble.serve/v1`` schema.
 
 ``benchmarks/run.py --smoke`` reuses check 3 as its ``session_api`` gate.
 """
@@ -238,6 +243,44 @@ def check_price_decay() -> str:
     )
 
 
+def check_serve() -> str:
+    """Minimal two-tenant scenario end-to-end through the control plane:
+    registry round-trip is bit-exact, both arms run, the adaptive report
+    is a valid ``nimble.serve/v1`` record with every roster tenant served
+    for the full horizon."""
+    from ..serve import (
+        ScenarioSpec,
+        get_scenario,
+        run_scenario,
+        validate_serve_record,
+    )
+
+    spec = get_scenario("minimal")
+    back = ScenarioSpec.from_json_obj(spec.to_json_obj())
+    if back != spec:
+        raise AssertionError("minimal scenario JSON round-trip diverged")
+    adaptive = run_scenario(spec, "adaptive")
+    static = run_scenario(spec, "static")
+    rec = adaptive.to_json_obj()
+    validate_serve_record(rec)
+    names = {t.name for t in spec.roster()}
+    if set(adaptive.tenants) != names or set(static.tenants) != names:
+        raise AssertionError(
+            f"control plane served {sorted(adaptive.tenants)}, "
+            f"roster {sorted(names)}"
+        )
+    for name, led in adaptive.tenants.items():
+        if led.windows != spec.windows:
+            raise AssertionError(
+                f"tenant {name!r} served {led.windows}/{spec.windows} windows"
+            )
+    return (
+        f"serve: minimal scenario round-trips; both arms ran "
+        f"{spec.windows} windows x {len(names)} tenants, report schema "
+        f"{rec['schema']} valid"
+    )
+
+
 def smoke_session_check() -> dict:
     """The ``benchmarks/run.py --smoke`` gate: arbitrated two-tenant window
     through the facade + schema validation.  Returns a summary record."""
@@ -259,6 +302,7 @@ def main(argv=None) -> int:
         check_arbitrated,
         check_fabric_pressure,
         check_price_decay,
+        check_serve,
     ]
     failed = 0
     for check in checks:

@@ -1,4 +1,16 @@
-"""Serving launcher: batched greedy/temperature generation.
+"""Serving launcher: scenario control plane + batched generation.
+
+Scenario mode — run a registry (or JSON-file) scenario through the
+continuous-traffic control plane (DESIGN.md §10) and print the SLO
+verdict:
+
+    PYTHONPATH=src python -m repro.launch.serve --scenario steady
+    PYTHONPATH=src python -m repro.launch.serve --scenario path/to/spec.json \
+        --mode static --json report.json
+    PYTHONPATH=src python -m repro.launch.serve --list-scenarios
+
+Generation mode — batched greedy/temperature token generation through
+``ServeEngine``:
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
         --batch 4 --prompt-len 8 --new-tokens 16
@@ -9,25 +21,72 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import numpy as np
 
-from repro.configs.base import get_config
-from repro.models.registry import build_model
-from repro.serve.engine import ServeEngine
-from repro.sharding.context import SINGLE
+def _run_scenario(args) -> int:
+    from repro.jsonio import write_json_file
+    from repro.serve import (
+        evaluate_scenario,
+        load_scenario,
+        run_scenario,
+        scenario_names,
+    )
+
+    spec = load_scenario(args.scenario)
+    t0 = time.time()
+    if args.mode == "both":
+        res = evaluate_scenario(spec)
+        report, slo = res["adaptive"], res["slo"]
+    else:
+        report, slo = run_scenario(spec, args.mode), None
+    dt = time.time() - t0
+
+    tenants = report.tenants
+    print(
+        f"[serve] scenario {spec.name!r}: {spec.windows} windows, "
+        f"{len(tenants)} tenant(s), mode={report.mode} ({dt:.1f}s)"
+    )
+    print(
+        f"[serve] cluster: total {report.total_completion_s:.4f}s, "
+        f"median {report.median_latency_s() * 1e3:.2f}ms, "
+        f"availability {report.availability:.2f}, "
+        f"Jain {report.jain_index:.3f}"
+    )
+    for name, led in sorted(tenants.items()):
+        life = f"w{led.joined}-" + (
+            f"w{led.left}" if led.left is not None else "end"
+        )
+        print(
+            f"[serve]   {name}: {life} {led.windows}w "
+            f"{led.completion_s:.4f}s drain, {led.replans} replans"
+            + (" (crashed)" if led.crashed else "")
+        )
+    if slo is not None:
+        for gate, v in slo["gates"].items():
+            val = v["value"]
+            shown = f"{val:.3f}" if isinstance(val, float) else str(val)
+            print(
+                f"[serve]   gate {gate}: "
+                f"{'PASS' if v['ok'] else 'FAIL'} "
+                f"(value {shown}, limit {v['limit']})"
+            )
+        print(f"[serve] SLO: {'PASS' if slo['pass'] else 'FAIL'}")
+    if args.json:
+        obj = report.to_json_obj()
+        if slo is not None:
+            obj["slo"] = slo
+        write_json_file(args.json, obj)
+        print(f"[serve] report -> {args.json}")
+    return 0 if slo is None or slo["pass"] else 1
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _run_generate(args):
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeEngine
+    from repro.sharding.context import SINGLE
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -50,6 +109,36 @@ def main(argv=None):
           f"({tok_s:.1f} tok/s)")
     print("[serve] sample:", out[0][:12].tolist())
     return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    # scenario mode
+    ap.add_argument("--scenario", default=None,
+                    help="registry name or scenario JSON path")
+    ap.add_argument("--mode", default="both",
+                    choices=("adaptive", "static", "both"),
+                    help="control-plane arm; 'both' also gates the SLOs")
+    ap.add_argument("--json", default=None,
+                    help="write the nimble.serve/v1 report here")
+    ap.add_argument("--list-scenarios", action="store_true")
+    # generation mode
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.list_scenarios:
+        from repro.serve import scenario_names
+        print("\n".join(scenario_names()))
+        return 0
+    if args.scenario is not None:
+        return _run_scenario(args)
+    return _run_generate(args)
 
 
 if __name__ == "__main__":

@@ -2,8 +2,11 @@
 
 ``make_serve_step`` builds the single-token decode function the dry-run
 lowers for the decode input shapes (one new token against a seq_len-deep
-cache).  ``ServeEngine`` drives it for real batched requests (examples/
-and the end-to-end serving smoke test).
+cache).  ``make_prefill_scan`` rolls the per-token prompt prefill into one
+``lax.scan`` — a single jitted dispatch instead of P host round-trips,
+bit-identical to stepping the prompt token by token (pinned by
+``tests/test_serve_engine.py``).  ``ServeEngine`` drives both for real
+batched requests (examples/ and the end-to-end serving smoke test).
 """
 
 from __future__ import annotations
@@ -26,6 +29,31 @@ def make_serve_step(model: Model):
     return serve_step
 
 
+def make_prefill_scan(model: Model):
+    """Whole-prompt prefill as one scan over (token column, position).
+
+    The scan body is exactly one ``decode_step`` — the same computation
+    the per-token loop ran — so the final cache and last-position logits
+    are bit-identical to P sequential steps, in one dispatch.
+    """
+
+    def prefill(params, cache, prompts):
+        """prompts [B, P] int32 -> (last logits [B, V], cache')."""
+        P = prompts.shape[1]
+
+        def body(cache, tok_pos):
+            tok, pos = tok_pos
+            logits, cache = model.decode_step(params, cache, tok, pos)
+            return cache, logits
+
+        cache, logits_seq = jax.lax.scan(
+            body, cache, (prompts.T, jnp.arange(P, dtype=jnp.int32))
+        )
+        return logits_seq[-1], cache
+
+    return prefill
+
+
 @dataclasses.dataclass
 class ServeEngine:
     model: Model
@@ -34,6 +62,7 @@ class ServeEngine:
 
     def __post_init__(self):
         self._step = jax.jit(make_serve_step(self.model))
+        self._prefill = jax.jit(make_prefill_scan(self.model))
 
     def generate(
         self,
@@ -43,16 +72,17 @@ class ServeEngine:
         seed: int = 0,
     ) -> np.ndarray:
         B, P = prompts.shape
+        if P < 1:
+            raise ValueError("prompts must carry at least one token")
         shape = InputShape("serve", self.max_len, B, "decode")
         cache = self.model.init_cache(B, shape)
         rng = jax.random.PRNGKey(seed)
-        tok = jnp.asarray(prompts[:, 0])
         out: List[np.ndarray] = []
-        # prefill by stepping the prompt (cache-correct for all families)
-        for i in range(P):
-            tok_i = jnp.asarray(prompts[:, i])
-            logits, cache = self._step(self.params, cache, tok_i,
-                                       jnp.int32(i))
+        # prefill the whole prompt in one jitted scan (cache-correct for
+        # all families; bit-identical to stepping token by token)
+        logits, cache = self._prefill(
+            self.params, cache, jnp.asarray(prompts, dtype=jnp.int32)
+        )
         # autoregressive decode
         for j in range(n_new):
             if temperature > 0:
