@@ -86,6 +86,11 @@ def drift_section(windows: int = 48, dwell: int = 12) -> dict:
         "solves": adaptive.stats.solves,
         "cache_hits": adaptive.stats.cache_hits,
         "loop_wall_us_per_window": us_adaptive / max(windows, 1),
+        # estimator/telemetry health rides along in every WindowReport
+        # (ISSUE 8): full-visibility drift should end at confidence 1.0
+        # with zero rejected telemetry records
+        "confidence_end": float(adaptive.reports[-1].confidence),
+        "telemetry_rejected": int(adaptive.reports[-1].telemetry_rejected),
     }
 
 
@@ -106,6 +111,8 @@ def balanced_section(windows: int = 30) -> dict:
         "windows": windows,
         "balanced_ratio": ratio,
         "balanced_replans": len(adaptive.replan_windows),
+        "confidence_end": float(adaptive.reports[-1].confidence),
+        "telemetry_rejected": int(adaptive.reports[-1].telemetry_rejected),
     }
 
 

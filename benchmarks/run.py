@@ -30,11 +30,21 @@ ISSUE 6 (flap recovery <= 2 windows with bounded replans, blackout drain
 never-joined), ``serve_slo`` validates the serving scenarios of ISSUE 7
 (every scenario holds its declared SLOs; steady parity >= 0.99x;
 elephant_victim and flap_under_load beat static on combined drain; churn
-leaves the survivor's steady state within 2% of a never-churned run), and
-``session_api`` pushes one arbitrated two-tenant window through the
-``repro.api.Session`` facade with the exported JSON validated against the
-``nimble.fabric_fairness/v1`` schema (the full facade selfcheck —
-including the serving check 6 — is ``python -m repro.api.selfcheck``).
+leaves the survivor's steady state within 2% of a never-churned run),
+``obs_overhead`` validates the flight-recorder contract of ISSUE 8 (a
+traced drift run byte-identical to the untraced one and within 3%
+wall-clock, with a valid ``nimble.trace/v1`` export — writes
+``BENCH_obs.json``), and ``session_api`` pushes one arbitrated two-tenant
+window through the ``repro.api.Session`` facade with the exported JSON
+validated against the ``nimble.fabric_fairness/v1`` schema (the full
+facade selfcheck — including the serving check 6 and the tracing check 7
+— is ``python -m repro.api.selfcheck``).
+
+``--compare`` re-runs the smoke benches and diffs every numeric metric
+against the committed ``BENCH_*.json`` baselines, printing a per-metric
+delta table and exiting nonzero when any non-wall-clock metric moved more
+than ``--threshold`` (default 10%) — the pre-merge "did my change move
+the benches" check.
 
 Every ``--smoke`` run also appends one timestamped ``trajectory/`` row to
 ``benchmarks/results.csv`` — gate verdicts plus the headline metric from
@@ -68,14 +78,20 @@ RESULTS_CSV = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "results.csv")
 CSV_HEADER = "name,us_per_call,derived\n"
 
+#: trajectory-row schema: v2 added the leading ``schema=`` token itself
+#: plus the ``obs_overhead`` gate and headline (ISSUE 8); v1 rows (no
+#: token) predate it and --compare treats them as unversioned
+TRAJECTORY_SCHEMA = 2
+
 
 def _append_trajectory_row(gates: dict, headline: dict) -> str:
     """Append one timestamped ``trajectory/`` row to benchmarks/results.csv.
 
-    The row carries the gate verdicts plus one headline metric per
-    ``BENCH_*.json`` so the repo accumulates a cross-PR trend line that
-    survives full ``main()`` rewrites.  The derived field is
-    space-separated ``k=v`` pairs — no commas, it lives in a CSV cell.
+    The row carries the bench schema version, the gate verdicts, and one
+    headline metric per ``BENCH_*.json`` so the repo accumulates a
+    cross-PR trend line that survives full ``main()`` rewrites.  The
+    derived field is space-separated ``k=v`` pairs — no commas, it lives
+    in a CSV cell.
     """
     import datetime
 
@@ -85,7 +101,7 @@ def _append_trajectory_row(gates: dict, headline: dict) -> str:
     verdicts = "+".join(
         f"{name}:{'pass' if ok else 'FAIL'}" for name, ok in gates.items()
     )
-    parts = [f"gates={verdicts}"]
+    parts = [f"schema=v{TRAJECTORY_SCHEMA}", f"gates={verdicts}"]
     parts += [f"{k}={v}" for k, v in headline.items()]
     derived = " ".join(parts)
     if "," in derived:
@@ -103,6 +119,7 @@ def smoke() -> None:
         bench_algo_overhead,
         bench_fairness,
         bench_faults,
+        bench_obs,
         bench_runtime_adapt,
         bench_serve,
         common,
@@ -184,6 +201,20 @@ def smoke() -> None:
         f"{serve_metrics['churn']['tail_ratio']:.4f}x control "
         f"{'OK' if gates['serve_slo'] else 'FAIL'}"
     )
+    print("# --- obs (smoke) ---")
+    obs_metrics = bench_obs.smoke()
+    out6 = _write_metrics("BENCH_obs.json", obs_metrics, kind="bench_obs")
+    print("# --- obs_overhead gate (smoke) ---")
+    # flight-recorder contract (ISSUE 8): enabled tracing within 3% of
+    # the untraced wall-clock, recorded run byte-identical to plain
+    _gate("obs_overhead", lambda: bench_obs.validate_obs(obs_metrics))
+    print(
+        f"# obs_overhead: {obs_metrics['overhead_ratio']:.4f}x "
+        f"(<= {bench_obs.OVERHEAD_LIMIT}x), "
+        f"identical={obs_metrics['identical']}, "
+        f"trace_events={obs_metrics['trace_events']} "
+        f"{'OK' if gates['obs_overhead'] else 'FAIL'}"
+    )
     print("# --- session_api (smoke) ---")
     from repro.api.selfcheck import smoke_session_check
 
@@ -208,12 +239,13 @@ def smoke() -> None:
         "serve_elephant": f"{serve_metrics['elephant_victim']['win']:.4f}x",
         "serve_flap": f"{serve_metrics['flap_under_load']['win']:.4f}x",
         "serve_churn_tail": f"{serve_metrics['churn']['tail_ratio']:.4f}x",
+        "obs_overhead": f"{obs_metrics['overhead_ratio']:.4f}x",
     }
     stamp = _append_trajectory_row(gates, headline)
     print(f"# trajectory: appended {stamp} row to {RESULTS_CSV}")
     print(
         f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}, "
-        f"{out3}, {out4}, {out5}"
+        f"{out3}, {out4}, {out5}, {out6}"
     )
     if gate_errors:
         name, exc = gate_errors[0]
@@ -229,6 +261,7 @@ def main() -> None:
         bench_kernels,
         bench_moe_e2e,
         bench_multitenant,
+        bench_obs,
         bench_p2p_async,
         bench_p2p_inter,
         bench_p2p_intra,
@@ -249,6 +282,7 @@ def main() -> None:
         ("fairness", bench_fairness),
         ("faults", bench_faults),
         ("serve", bench_serve),
+        ("obs", bench_obs),
         ("kernels", bench_kernels),
     ]
     metric_files = {
@@ -256,6 +290,7 @@ def main() -> None:
         "fairness": ("BENCH_fairness.json", "bench_fairness"),
         "faults": ("BENCH_faults.json", "bench_faults"),
         "serve": ("BENCH_serve.json", "serve"),
+        "obs": ("BENCH_obs.json", "bench_obs"),
     }
     print("name,us_per_call,derived")
     for name, mod in sections:
@@ -283,8 +318,116 @@ def main() -> None:
     )
 
 
+#: the committed per-PR bench baselines --compare diffs against
+BENCH_FILES = (
+    "BENCH_algo_overhead.json",
+    "BENCH_runtime_adapt.json",
+    "BENCH_fairness.json",
+    "BENCH_faults.json",
+    "BENCH_serve.json",
+    "BENCH_obs.json",
+)
+
+#: metric-path fragments whose values are wall-clock (machine-dependent)
+#: — reported in the delta table but never gated
+VOLATILE_FRAGMENTS = ("wall", "_us", "us_per", "overhead", "elapsed",
+                      "host_speedup", "jit_trace_ms")
+
+#: default relative-delta gate for --compare
+COMPARE_THRESHOLD = 0.10
+
+
+def _numeric_leaves(obj, prefix: str = ""):
+    """Yield ``(dotted.path, float)`` for every numeric leaf (bools are
+    config, not metrics; the schema envelope is identity, not data)."""
+    if isinstance(obj, dict):
+        for k in sorted(obj):
+            if k == "schema":
+                continue
+            yield from _numeric_leaves(obj[k], f"{prefix}{k}." if prefix
+                                       else f"{k}.")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _numeric_leaves(v, f"{prefix}{i}.")
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield prefix.rstrip("."), float(obj)
+
+
+def _is_volatile(path: str) -> bool:
+    return any(frag in path for frag in VOLATILE_FRAGMENTS)
+
+
+def compare(threshold: float = COMPARE_THRESHOLD) -> int:
+    """Re-run the smoke benches and diff against the committed baselines.
+
+    Loads the repo-root ``BENCH_*.json`` snapshots *before* the rerun
+    overwrites them, then prints a per-metric delta table (relative
+    change against the committed value).  Non-volatile metrics whose
+    relative delta exceeds ``threshold`` are regressions: each is named,
+    and the exit status is nonzero if any exist.  Wall-clock metrics
+    (``*_us``, ``*wall*``, ``overhead``, ``host_speedup``,
+    ``jit_trace_ms`` — anything derived from machine timing) are shown
+    for context but never gated — they measure the machine, not the code.
+    """
+    import json
+
+    baselines: dict = {}
+    for fname in BENCH_FILES:
+        path = os.path.join(ROOT, fname)
+        if os.path.exists(path):
+            with open(path) as f:
+                baselines[fname] = dict(_numeric_leaves(json.load(f)))
+    if not baselines:
+        print("# --compare: no committed BENCH_*.json baselines found")
+        return 2
+
+    smoke()  # rewrites the BENCH files with this machine's numbers
+
+    regressions: list = []
+    print(f"\n# --- compare vs committed baselines "
+          f"(threshold {threshold:.0%}) ---")
+    print("file,metric,committed,current,delta,gated")
+    for fname, base in sorted(baselines.items()):
+        with open(os.path.join(ROOT, fname)) as f:
+            fresh = dict(_numeric_leaves(json.load(f)))
+        for path in sorted(set(base) & set(fresh)):
+            old, new = base[path], fresh[path]
+            if old == new:
+                continue
+            rel = abs(new - old) / max(abs(old), 1e-12)
+            gated = not _is_volatile(path)
+            flag = "gated" if gated else "volatile"
+            if gated and rel > threshold:
+                regressions.append((fname, path, old, new, rel))
+                flag = "REGRESSION"
+            print(f"{fname},{path},{old:.6g},{new:.6g},{rel:+.2%},{flag}")
+        for path in sorted(set(base) - set(fresh)):
+            regressions.append((fname, path, base[path], None, float("inf")))
+            print(f"{fname},{path},{base[path]:.6g},MISSING,,REGRESSION")
+    if regressions:
+        print(f"# compare: {len(regressions)} metric(s) moved more than "
+              f"{threshold:.0%} vs the committed baselines:")
+        for fname, path, old, new, rel in regressions:
+            print(f"#   {fname}:{path}  {old:.6g} -> "
+                  f"{'MISSING' if new is None else f'{new:.6g}'}")
+        return 1
+    print("# compare: all gated metrics within threshold")
+    return 0
+
+
+def _parse_threshold(argv) -> float:
+    for i, arg in enumerate(argv):
+        if arg == "--threshold" and i + 1 < len(argv):
+            return float(argv[i + 1])
+        if arg.startswith("--threshold="):
+            return float(arg.split("=", 1)[1])
+    return COMPARE_THRESHOLD
+
+
 if __name__ == "__main__":
-    if "--smoke" in sys.argv[1:]:
+    if "--compare" in sys.argv[1:]:
+        sys.exit(compare(_parse_threshold(sys.argv[1:])))
+    elif "--smoke" in sys.argv[1:]:
         smoke()
     else:
         main()

@@ -13,8 +13,11 @@ routing policies compared on the calibrated fabric simulator:
 and produces bit-identical plans; the Session is the recommended front
 door.  See DESIGN.md §5.)
 
-Then instantiates one of the assigned model architectures (reduced size) and
-runs a forward pass, showing the model registry side of the framework.
+Then attaches a :class:`repro.obs.FlightRecorder` to a short adaptive run
+— one object captures a Perfetto-openable trace, a metrics snapshot, and
+a plan-provenance audit trail (DESIGN.md §11) — and finally instantiates
+one of the assigned model architectures (reduced size) and runs a forward
+pass, showing the model registry side of the framework.
 
 Run:
     PYTHONPATH=src python examples/quickstart.py
@@ -69,7 +72,27 @@ def main():
         print(f"\nMWU congestion vs lower bound: {z:.4f}s vs {lb:.4f}s "
               f"(gap {100 * (z / lb - 1):.1f}%)")
 
-    # ---- 2. model registry: one assigned arch, reduced, forward pass -------
+    # ---- 2. flight recorder: trace one adaptive run (DESIGN.md §11) --------
+    from repro.obs import FlightRecorder, validate_trace
+    from repro.runtime import drifting_skew_trace
+
+    rec = FlightRecorder()
+    adaptive_spec = SessionSpec(
+        topology=TopologySpec(n_devices=8, group_size=4),
+        adaptivity="adaptive",
+    )
+    with Session(adaptive_spec, recorder=rec) as sess:
+        sess.run_trace(drifting_skew_trace(8, 12, dwell=4))
+    info = validate_trace(rec.export_trace())
+    swapped = rec.provenance.swapped()
+    print(f"\nflight recorder: {info['events']} trace events, "
+          f"{info['spans']} spans, layers={info['cats']}, "
+          f"corr={info['correlation_id']}; "
+          f"{len(rec.provenance)} plans issued, {len(swapped)} swapped")
+    # open the trace in Perfetto / chrome://tracing:
+    #   write_json_file("trace.json", rec.export_trace())
+
+    # ---- 3. model registry: one assigned arch, reduced, forward pass -------
     import jax
     import jax.numpy as jnp
 

@@ -86,7 +86,14 @@ def runtime_adapt_section():
         f"| drifting skew | {d['windows']} | adaptive {d['adaptive_speedup']:.2f}x "
         f"vs static (oracle {d['oracle_speedup']:.2f}x), "
         f"{d['replans']} replans ({d['replan_fraction']:.0%}), "
-        f"{d['cache_hits']} cache hits |"
+        f"{d['cache_hits']} cache hits"
+        + (
+            f", confidence {d['confidence_end']:.2f}, "
+            f"{d['telemetry_rejected']} rejected"
+            if "confidence_end" in d
+            else ""
+        )
+        + " |"
     )
     print(
         f"| balanced | {b['windows']} | adaptive/static = "
@@ -255,6 +262,22 @@ def serve_section():
         )
 
 
+def obs_section():
+    """Flight-recorder contract table from BENCH_obs.json (§11)."""
+    rec = _load_tagged("BENCH_obs.json", "bench_obs")
+    if rec is None:
+        return
+    print("\n### Observability (flight recorder)\n")
+    print(
+        f"traced drift run ({rec['windows']}w): overhead "
+        f"{rec['overhead_ratio']:.4f}x the untraced loop (gate <= 1.03), "
+        f"recorded arm byte-identical: {rec['identical']}; trace "
+        f"{rec['trace_events']} events / {rec['trace_spans']} spans across "
+        f"{', '.join(rec['layers'])}; provenance {rec['plans_issued']} "
+        f"plans issued, {rec['plans_swapped']} swapped"
+    )
+
+
 def main():
     base = load("*_16x16_nimble.json")
     opt = load("*_16x16_nimble_alt0.25_opt.json")
@@ -286,6 +309,7 @@ def main():
     fairness_section()
     faults_section()
     serve_section()
+    obs_section()
 
 
 if __name__ == "__main__":

@@ -20,7 +20,12 @@ this environment:
      runs the registry's ``minimal`` two-tenant scenario end-to-end
      through both arms, the scenario survives a JSON round-trip
      bit-exactly, and the exported report validates against the
-     ``nimble.serve/v1`` schema.
+     ``nimble.serve/v1`` schema;
+  7. **obs**        — the flight recorder (ISSUE 8, DESIGN.md §11): the
+     ``minimal`` scenario rerun with tracing attached exports a valid
+     ``nimble.trace/v1`` Chrome trace spanning all four layers under one
+     correlation id, every swap has a provenance record, and the serve
+     report embeds a ``nimble.metrics/v1`` snapshot.
 
 ``benchmarks/run.py --smoke`` reuses check 3 as its ``session_api`` gate.
 """
@@ -281,6 +286,53 @@ def check_serve() -> str:
     )
 
 
+def check_obs() -> str:
+    """Flight-recorded minimal scenario: valid four-layer Chrome trace
+    under one correlation id, provenance for every swap, metrics embedded
+    in the serve record (ISSUE 8, DESIGN.md §11)."""
+    from ..jsonio import schema_kind, schema_version
+    from ..obs import FlightRecorder, validate_trace
+    from ..serve import get_scenario, run_scenario
+
+    spec = get_scenario("minimal")
+    recorder = FlightRecorder()
+    report = run_scenario(spec, "adaptive", recorder=recorder)
+
+    trace = recorder.export_trace()
+    info = validate_trace(trace)  # schema, ts order, nesting, one corr id
+    missing = {"serve", "runtime", "fabric", "planner"} - set(info["cats"])
+    if missing:
+        raise AssertionError(f"trace has no spans from layers {sorted(missing)}")
+    if info["correlation_id"] != recorder.correlation_id:
+        raise AssertionError("trace lost its correlation id")
+
+    # the sessions are already retired — provenance is the audit trail
+    swapped = recorder.provenance.swapped()
+    if not swapped:
+        raise AssertionError("no swap acquired a provenance record")
+    for p in swapped:
+        if p.swapped_window is None or not p.trigger or p.signature is None:
+            raise AssertionError(
+                f"swapped plan v{p.version} has an incomplete provenance "
+                f"record: {p.to_json_obj()}"
+            )
+
+    rec = report.to_json_obj()
+    metrics = rec.get("metrics")
+    if metrics is None or schema_kind(metrics) != "metrics":
+        raise AssertionError("serve record did not embed a metrics snapshot")
+    if schema_version(metrics) != 1:
+        raise AssertionError(f"metrics schema version {metrics.get('schema')}")
+    if not metrics["metrics"]:
+        raise AssertionError("metrics snapshot is empty")
+    return (
+        f"obs: trace {info['events']} events across 4 layers "
+        f"(corr={info['correlation_id']}); {len(recorder.provenance)} plans "
+        f"issued, {len(swapped)} swaps all provenanced; "
+        f"{len(metrics['metrics'])} metrics embedded"
+    )
+
+
 def smoke_session_check() -> dict:
     """The ``benchmarks/run.py --smoke`` gate: arbitrated two-tenant window
     through the facade + schema validation.  Returns a summary record."""
@@ -303,6 +355,7 @@ def main(argv=None) -> int:
         check_fabric_pressure,
         check_price_decay,
         check_serve,
+        check_obs,
     ]
     failed = 0
     for check in checks:

@@ -67,12 +67,22 @@ class Session:
     released on exit.
     """
 
-    def __init__(self, spec: Optional[SessionSpec] = None, **spec_kwargs):
+    def __init__(self, spec: Optional[SessionSpec] = None, *,
+                 recorder=None, **spec_kwargs):
         if spec is None:
             spec = SessionSpec(**spec_kwargs)
         elif spec_kwargs:
             raise TypeError("pass either a SessionSpec or its fields, not both")
         self.spec = spec
+        # flight recorder (repro.obs, DESIGN.md §11): stored *before* the
+        # runtime is built so the construction-time initial solve is traced
+        # under this session's correlation id.  None (the default) leaves
+        # every layer on its exact unrecorded code path.
+        self._recorder = (
+            recorder
+            if recorder is not None and getattr(recorder, "enabled", False)
+            else None
+        )
         self.topo = spec.build_topology()
         self.cost_model = spec.build_cost_model()
         # incidence tables are fingerprint-cached (DESIGN.md §2.2); building
@@ -97,7 +107,17 @@ class Session:
                 spec.tenant, self.runtime, spec.tenant_config()
             )
             self._registered = True
+        if self._recorder is not None and self.arbiter is not None:
+            # shared fabrics: every joining session attaches the same
+            # recorder — idempotent, last attach wins
+            self.arbiter.attach_recorder(self._recorder)
         self._state = "active"
+
+    @property
+    def recorder(self):
+        """The attached :class:`repro.obs.FlightRecorder` (None when the
+        session runs unrecorded)."""
+        return self._recorder
 
     # -- lifecycle ---------------------------------------------------------------
     @property
@@ -344,7 +364,9 @@ class Session:
         ``nimble.runtime_trace/v1`` (last ``run_trace``), ``nimble.
         fabric_fairness/v1`` and ``nimble.fabric_arbiter_stats/v1`` — so
         existing consumers (``experiments/make_report.py``, the benches)
-        dispatch on the kinds they already know.
+        dispatch on the kinds they already know — plus a
+        ``nimble.metrics/v1`` snapshot (DESIGN.md §11) collected from the
+        live stack, whether or not a recorder is attached.
         """
         self._require_active()
         payload: dict = {
@@ -362,4 +384,25 @@ class Session:
         if self.arbiter is not None:
             payload["fairness"] = self.arbiter.fairness_report()
             payload["arbiter_stats"] = self.arbiter.stats.to_json_obj()
+        payload["metrics"] = self._metrics_snapshot()
         return tag("session", payload)
+
+    def _metrics_snapshot(self) -> dict:
+        """``nimble.metrics/v1`` snapshot of the scattered stack health
+        signals (replans, reprices, evictions, gated windows, telemetry
+        rejections, estimator confidence) under the §11 naming scheme.
+
+        Collected from a fresh registry each call — pull-based, so the
+        per-window hot path never pays for it.  With a recorder attached
+        its registry is used instead, folding in anything the layers
+        pushed live (per-window latency histograms).
+        """
+        from ..obs import MetricsRegistry, collect_session
+
+        reg = (
+            self._recorder.metrics
+            if self._recorder is not None
+            else MetricsRegistry()
+        )
+        collect_session(reg, self)
+        return reg.snapshot()

@@ -65,6 +65,23 @@ class PlannerConfig:
     hysteresis: float = 0.5
 
 
+def planner_provenance(cfg: PlannerConfig) -> dict:
+    """Solver-parameter fingerprint recorded in plan-provenance records
+    and ``solve`` trace spans (DESIGN.md §11).
+
+    ``engine`` identifies the planning discipline — today always the MWU
+    sweep; the ROADMAP's ``PlanEngine`` zoo (BvN / FAST schedulers) will
+    key audit records on it.
+    """
+    return {
+        "engine": "mwu",
+        "lam": float(cfg.lam),
+        "n_iters": int(cfg.n_iters),
+        "chunk_bytes": float(cfg.chunk_bytes),
+        "hysteresis": float(cfg.hysteresis),
+    }
+
+
 def plan_flows(
     demand_bytes: jnp.ndarray,        # [n, n] float32, zero diagonal
     tables: PlannerTables,

@@ -211,6 +211,24 @@ class FabricState:
         """Drain time of the *stacked* fabric load — the co-planning metric."""
         return self.drain_time_s(self.total_load())
 
+    # -- observability ----------------------------------------------------------
+    def summary(self) -> dict:
+        """Compact health snapshot for the metrics registry (DESIGN.md §11).
+
+        Unlike :meth:`to_json_obj` this stays numeric-only (no schema
+        envelope, no per-tenant drain map) so the flight recorder can map
+        it straight onto gauges; unstamped tenants report staleness 0.0 —
+        a timeless entry is never stale.
+        """
+        return {
+            "clock": int(self._clock),
+            "tenants": len(self._committed),
+            "combined_drain_s": self.combined_drain_s(),
+            "staleness": {
+                t: (self.staleness(t) or 0.0) for t in self._committed
+            },
+        }
+
     # -- link events ------------------------------------------------------------
     def apply_link_overrides(
         self, overrides: Mapping[Tuple[int, int], float]

@@ -56,6 +56,25 @@ def schema_kind(record: dict) -> str:
     return schema.split(".", 1)[1].rsplit("/", 1)[0]
 
 
+def schema_version(record: dict) -> int:
+    """Extract ``<version>`` from a tagged record (0 if untagged/bad).
+
+    Consumers that must stay comparable across PRs — the trace validator,
+    ``benchmarks/run.py --compare`` — dispatch on this rather than string
+    matching the whole envelope.
+    """
+    schema = record.get("schema", "")
+    if "/" not in schema:
+        return 0
+    tail = schema.rsplit("/", 1)[1]
+    if not tail.startswith("v"):
+        return 0
+    try:
+        return int(tail[1:])
+    except ValueError:
+        return 0
+
+
 def write_json_file(path: str, obj, *, indent: bool = True) -> None:
     """Serialize ``obj`` to ``path`` with sorted keys + trailing newline.
 

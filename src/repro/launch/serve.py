@@ -9,6 +9,17 @@ verdict:
         --mode static --json report.json
     PYTHONPATH=src python -m repro.launch.serve --list-scenarios
 
+With ``--trace-out PATH`` the run is flight-recorded (DESIGN.md §11): a
+:class:`repro.obs.FlightRecorder` rides the adaptive arm and the
+resulting ``nimble.trace/v1`` record — valid Chrome/Perfetto trace JSON
+with one correlation id across serve / runtime / fabric / planner — is
+written to PATH (open it at ``ui.perfetto.dev`` or ``chrome://tracing``).
+``--metrics-out PATH`` writes the final ``nimble.metrics/v1`` snapshot;
+either flag also prints trace and plan-provenance summaries:
+
+    PYTHONPATH=src python -m repro.launch.serve --scenario flap_under_load \
+        --mode adaptive --trace-out trace.json --metrics-out metrics.json
+
 Generation mode — batched greedy/temperature token generation through
 ``ServeEngine``:
 
@@ -32,12 +43,17 @@ def _run_scenario(args) -> int:
     )
 
     spec = load_scenario(args.scenario)
+    recorder = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import FlightRecorder
+
+        recorder = FlightRecorder()
     t0 = time.time()
     if args.mode == "both":
-        res = evaluate_scenario(spec)
+        res = evaluate_scenario(spec, recorder=recorder)
         report, slo = res["adaptive"], res["slo"]
     else:
-        report, slo = run_scenario(spec, args.mode), None
+        report, slo = run_scenario(spec, args.mode, recorder=recorder), None
     dt = time.time() - t0
 
     tenants = report.tenants
@@ -70,6 +86,25 @@ def _run_scenario(args) -> int:
                 f"(value {shown}, limit {v['limit']})"
             )
         print(f"[serve] SLO: {'PASS' if slo['pass'] else 'FAIL'}")
+    if recorder is not None:
+        from repro.obs import validate_trace
+
+        trace = recorder.export_trace()
+        info = validate_trace(trace)
+        print(
+            f"[serve] trace: {info['events']} events, {info['spans']} spans, "
+            f"layers={sorted(info['cats'])}, corr={info['correlation_id']}"
+        )
+        print(
+            f"[serve] provenance: {len(recorder.provenance)} plans issued, "
+            f"{len(recorder.provenance.swapped())} swapped"
+        )
+        if args.trace_out:
+            write_json_file(args.trace_out, trace)
+            print(f"[serve] trace -> {args.trace_out}")
+        if args.metrics_out:
+            write_json_file(args.metrics_out, recorder.metrics_snapshot())
+            print(f"[serve] metrics -> {args.metrics_out}")
     if args.json:
         obj = report.to_json_obj()
         if slo is not None:
@@ -121,6 +156,11 @@ def main(argv=None):
                     help="control-plane arm; 'both' also gates the SLOs")
     ap.add_argument("--json", default=None,
                     help="write the nimble.serve/v1 report here")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="flight-record the run and write the "
+                         "nimble.trace/v1 Chrome trace JSON here")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write the final nimble.metrics/v1 snapshot here")
     ap.add_argument("--list-scenarios", action="store_true")
     # generation mode
     ap.add_argument("--arch", default="smollm-135m")

@@ -61,7 +61,7 @@ from ..core.mcf import (
     congestion_lower_bound,
     plan_from_flows,
 )
-from ..core.planner import PlannerConfig, plan_flows_batch
+from ..core.planner import PlannerConfig, plan_flows_batch, planner_provenance
 from ..core.schedule import build_planner_tables
 from ..core.topology import Topology
 from .estimator import DemandEstimator
@@ -195,6 +195,9 @@ class PlanHandle:
     solved_demand: Optional[np.ndarray] = None
     solved_prices: Optional[np.ndarray] = None
     repriced: bool = False
+    # flight-recorder audit record (repro.obs.PlanProvenance) when a
+    # recorder is attached; None on unrecorded runs
+    provenance: Optional[object] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -217,6 +220,13 @@ class WindowReport:
     # "staleness", "fabric") here, so report consumers can tell a gated
     # trigger from a window where no trigger fired at all
     trigger_reason: str = "none"
+    # health signals surfaced from the estimator / telemetry layers
+    # (DESIGN.md §11): prediction confidence after this window (decays
+    # through blackouts) and the cumulative count of telemetry records
+    # rejected as non-finite/negative.  Bookends (static/oracle) report
+    # the healthy defaults.
+    confidence: float = 1.0
+    telemetry_rejected: int = 0
 
     def to_json_obj(self) -> dict:
         return tag("runtime_window", dataclasses.asdict(self))
@@ -232,6 +242,7 @@ class RuntimeStats:
     events: int = 0
     reprices: int = 0       # stale pendings re-solved on live prices at swap
     watchdog_abandons: int = 0   # pendings past deadline, re-solved live
+    gated: int = 0          # fired triggers throttled by the fabric gate
 
     def to_json_obj(self) -> dict:
         return tag("runtime_stats", dataclasses.asdict(self))
@@ -307,6 +318,10 @@ class OrchestrationRuntime:
             policy=policy,
             estimator=estimator,
             initial_demand=spec.initial_demand,
+            # flight recorder (DESIGN.md §11): passed at construction so
+            # the *initial* solve is traced and provenance-recorded too
+            recorder=getattr(session, "_recorder", None),
+            tenant_label=spec.tenant,
         )
 
     def __init__(
@@ -318,6 +333,8 @@ class OrchestrationRuntime:
         estimator: DemandEstimator | None = None,
         events: EventLog | None = None,
         initial_demand: Optional[np.ndarray] = None,
+        recorder=None,
+        tenant_label: Optional[str] = None,
     ):
         self.topo = topo
         self.cm = cost_model or CostModel()
@@ -343,6 +360,14 @@ class OrchestrationRuntime:
         self._arbiter = None
         self._tenant: Optional[str] = None
         self._fabric_window_offset = 0
+        # flight recorder (repro.obs, DESIGN.md §11): every hook below is
+        # guarded by one ``self._obs is None`` check, so a run without a
+        # recorder executes the exact pre-obs instruction stream
+        self._obs = None
+        self._obs_label = tenant_label or "runtime"
+        self._fault_context: Tuple[str, ...] = ()
+        if recorder is not None and getattr(recorder, "enabled", False):
+            self._obs = recorder
         self._rebuild_planner()
 
         if initial_demand is None:
@@ -380,6 +405,40 @@ class OrchestrationRuntime:
         else:
             self._fabric_window_offset = 0
 
+    # -- flight recorder --------------------------------------------------------
+    def attach_recorder(self, recorder, tenant: Optional[str] = None) -> None:
+        """Attach a :class:`repro.obs.FlightRecorder` after construction.
+
+        Prefer passing ``recorder=`` to the constructor (or building via a
+        recorded Session) so the initial solve is traced too; this hook
+        exists for already-built runtimes and backfills a provenance
+        record for the current active plan so the audit trail still covers
+        every plan.  A disabled recorder (or ``None``) detaches.
+        """
+        if tenant is not None:
+            self._obs_label = tenant
+        if recorder is None or not getattr(recorder, "enabled", False):
+            self._obs = None
+            return
+        self._obs = recorder
+        if self._active.provenance is None:
+            self._active.provenance = recorder.provenance.issue(
+                tenant=self._obs_label,
+                version=self._active.version,
+                source=self._active.source,
+                trigger="initial",
+                cache_hit=False,
+                issued_window=self._active.solved_window,
+                signature=self._active.signature,
+                demand_bytes=(
+                    float(self._active.solved_demand.sum())
+                    if self._active.solved_demand is not None else 0.0
+                ),
+                baseline_ratio=self._active.baseline_ratio,
+                planner=planner_provenance(self.cfg.planner),
+                prices=self._active.solved_prices,
+            )
+
     def _arbiter_prices(self) -> Optional[np.ndarray]:
         """Exported prices for this tenant (None when unbound or alone)."""
         if self._arbiter is None:
@@ -409,12 +468,15 @@ class OrchestrationRuntime:
     def _solve_handle(self, demand: np.ndarray, window: int,
                       source: str,
                       repriced: bool = False,
-                      prices=_PRICES_UNSET) -> Tuple[PlanHandle, bool]:
+                      prices=_PRICES_UNSET,
+                      trigger: Optional[str] = None) -> Tuple[PlanHandle, bool]:
         """Probe the plan cache, solving on a miss; returns (handle, hit).
 
         ``prices`` lets a caller that already holds the live price vector
         (the swap-boundary reprice verdict) pass it through instead of
-        recomputing the decayed external load.
+        recomputing the decayed external load.  ``trigger`` is the replan
+        reason recorded in the provenance audit trail (defaults to
+        ``source``).
         """
         if prices is OrchestrationRuntime._PRICES_UNSET:
             prices = self._arbiter_prices()
@@ -422,10 +484,19 @@ class OrchestrationRuntime:
         plan = self._cache_get(sig)
         cache_hit = plan is not None
         if plan is None:
-            plan = self._solve_batch(
-                demand[None],
-                ext_loads=None if prices is None else prices[None],
-            )[0]
+            ext = None if prices is None else prices[None]
+            if self._obs is not None:
+                # the planner-layer span: the host boundary of the jitted
+                # plan_flows_batch dispatch (tracing cannot live inside
+                # the traced/jitted function itself)
+                with self._obs.tracer.span(
+                    "solve", "planner", self._obs_label,
+                    {"window": window, "source": source,
+                     "priced": prices is not None},
+                ):
+                    plan = self._solve_batch(demand[None], ext_loads=ext)[0]
+            else:
+                plan = self._solve_batch(demand[None], ext_loads=ext)[0]
             self._cache_put(sig, plan)
         self._version += 1
         handle = PlanHandle(
@@ -439,6 +510,22 @@ class OrchestrationRuntime:
             solved_prices=prices,
             repriced=repriced,
         )
+        if self._obs is not None:
+            handle.provenance = self._obs.provenance.issue(
+                tenant=self._obs_label,
+                version=handle.version,
+                source=handle.source,
+                trigger=trigger or source,
+                cache_hit=cache_hit,
+                issued_window=window,
+                signature=sig,
+                demand_bytes=float(demand.sum()),
+                baseline_ratio=handle.baseline_ratio,
+                planner=planner_provenance(self.cfg.planner),
+                prices=prices,
+                repriced=repriced,
+                fault_context=self._fault_context,
+            )
         return handle, cache_hit
 
     # -- plan cache -------------------------------------------------------------
@@ -570,20 +657,28 @@ class OrchestrationRuntime:
             and window - handle.solved_window > deadline
         ):
             self.stats.watchdog_abandons += 1
+            if handle.provenance is not None:
+                handle.provenance.mark_abandoned()
+            if self._obs is not None:
+                self._obs.tracer.instant(
+                    "replan", "runtime", self._obs_label,
+                    {"window": window, "source": "watchdog",
+                     "abandoned_version": handle.version},
+                )
             live = (
                 self.estimator.predict()
                 if self.estimator.initialized
                 else handle.solved_demand
             )
             wd_handle, cache_hit = self._solve_handle(
-                live, window, "watchdog"
+                live, window, "watchdog", trigger="watchdog"
             )
-            self._pending = (
-                wd_handle,
-                window + (
-                    1 if cache_hit else max(1, self.cfg.solve_delay_windows)
-                ),
+            ready = window + (
+                1 if cache_hit else max(1, self.cfg.solve_delay_windows)
             )
+            if wd_handle.provenance is not None:
+                wd_handle.provenance.mark_ready(ready)
+            self._pending = (wd_handle, ready)
             return False
         if ready > window:
             return False
@@ -599,13 +694,31 @@ class OrchestrationRuntime:
             if verdict.moved:
                 re_handle, cache_hit = self._solve_handle(
                     handle.solved_demand, window, "reprice", repriced=True,
-                    prices=verdict.prices,
+                    prices=verdict.prices, trigger="reprice",
                 )
                 ready = window + (
                     1 if cache_hit else max(1, self.cfg.solve_delay_windows)
                 )
+                if re_handle.provenance is not None:
+                    re_handle.provenance.mark_ready(ready)
                 self._pending = (re_handle, ready)
                 self.stats.reprices += 1
+            if handle.provenance is not None:
+                handle.provenance.mark_swapped(
+                    window, prices=verdict.prices,
+                    rel_change=verdict.rel_change, repriced=verdict.moved,
+                )
+        elif handle.provenance is not None:
+            handle.provenance.mark_swapped(
+                window, prices=self._arbiter_prices()
+                if self._arbiter is not None else None,
+            )
+        if self._obs is not None:
+            self._obs.tracer.instant(
+                "swap", "runtime", self._obs_label,
+                {"window": window, "version": handle.version,
+                 "source": handle.source, "repriced": handle.repriced},
+            )
         self._active = handle
         self.stats.swaps += 1
         # pass the solve provenance: a fabric-pressure hint newer than
@@ -615,13 +728,25 @@ class OrchestrationRuntime:
         return True
 
     def _issue_replan(self, predicted: np.ndarray, window: int,
-                      source_hint: str = "solve") -> Tuple[PlanHandle, bool]:
-        handle, cache_hit = self._solve_handle(predicted, window, source_hint)
+                      source_hint: str = "solve",
+                      trigger: Optional[str] = None) -> Tuple[PlanHandle, bool]:
+        handle, cache_hit = self._solve_handle(
+            predicted, window, source_hint, trigger=trigger
+        )
         # cache hit swaps at the very next boundary (no solve latency);
         # a miss pays the off-hot-path solve delay first
         ready = window + (
             1 if cache_hit else max(1, self.cfg.solve_delay_windows)
         )
+        if handle.provenance is not None:
+            handle.provenance.mark_ready(ready)
+        if self._obs is not None:
+            self._obs.tracer.instant(
+                "replan", "runtime", self._obs_label,
+                {"window": window, "reason": trigger or source_hint,
+                 "version": handle.version, "cache_hit": cache_hit,
+                 "ready": ready},
+            )
         self._pending = (handle, ready)
         self.stats.replans += 1
         return handle, cache_hit
@@ -645,14 +770,58 @@ class OrchestrationRuntime:
         inflates the measured completion time (straggler windows) without
         touching the routed bytes.  Defaults are bit-identical to the
         pre-fault-harness behavior.
+
+        With a flight recorder attached the window runs inside a
+        ``window`` trace span on this tenant's track (with ``fault`` /
+        ``swap`` / ``replan`` markers nested inside) and observes the
+        completion into the per-tenant latency histogram; without one the
+        wrapper is a single ``None`` check.
         """
+        if self._obs is None:
+            return self._step(
+                demand, observed=observed, completion_scale=completion_scale
+            )
+        tr = self._obs.tracer
+        tr.advance_to(self._window * 1000)
+        span = tr.begin(
+            "window", "runtime", self._obs_label, {"window": self._window}
+        )
+        report = self._step(
+            demand, observed=observed, completion_scale=completion_scale
+        )
+        tr.end(span, {
+            "plan_version": report.plan_version,
+            "congestion_ratio": round(report.congestion_ratio, 4),
+            "reason": report.replan_reason,
+        })
+        self._obs.metrics.histogram(
+            "nimble_runtime_window_completion_s",
+            {"tenant": self._obs_label},
+        ).observe(report.completion_s)
+        return report
+
+    def _step(
+        self,
+        demand: np.ndarray,
+        *,
+        observed=_OBS_UNSET,
+        completion_scale: float = 1.0,
+    ) -> WindowReport:
         w = self._window
         demand = np.asarray(demand, dtype=np.float64)
         if observed is OrchestrationRuntime._OBS_UNSET:
             observed = demand
 
         due = self.events.pop_due(w)
+        self._fault_context = tuple(ev.describe() for ev in due)
         if due:
+            if self._obs is not None:
+                for ev in due:
+                    self._obs.tracer.instant(
+                        "fault", "runtime", self._obs_label,
+                        {"window": w, "event": ev.describe(),
+                         "kind": ev.kind},
+                    )
             self._apply_events(due)
         swapped = self._maybe_swap(w)
 
@@ -713,6 +882,7 @@ class OrchestrationRuntime:
                 decision = dataclasses.replace(
                     decision, replan=False, reason="gated"
                 )
+                self.stats.gated += 1
                 # the fired trigger disarmed the policy but no swap will
                 # follow — re-arm so the tenant retries once tokens refill
                 self.policy.notify_gated()
@@ -723,7 +893,9 @@ class OrchestrationRuntime:
                     self.policy.notify_fabric_pressure(w)
         cache_hit = False
         if decision.replan:
-            _, cache_hit = self._issue_replan(predicted, w)
+            _, cache_hit = self._issue_replan(
+                predicted, w, trigger=decision.reason
+            )
 
         self.stats.windows += 1
         self._window += 1
@@ -742,6 +914,8 @@ class OrchestrationRuntime:
             cache_hit=cache_hit,
             events=tuple(ev.describe() for ev in due),
             trigger_reason=trigger_reason,
+            confidence=float(self.estimator.confidence),
+            telemetry_rejected=int(self.telemetry.rejected),
         )
 
     def run_trace(

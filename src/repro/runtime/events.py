@@ -42,6 +42,19 @@ class LinkEvent:
         extra = "" if self.scale in (0.0, 1.0) else f" x{self.scale:g}"
         return f"{self.kind}[{self.src}->{self.dst}]@w{self.window}{extra}"
 
+    def to_json_obj(self) -> dict:
+        """Tagged ``nimble.link_event/v1`` record — the structured twin of
+        :meth:`describe`, for trace args and provenance fault context."""
+        from ..jsonio import tag
+
+        return tag("link_event", {
+            "window": int(self.window),
+            "src": int(self.src),
+            "dst": int(self.dst),
+            "scale": float(self.scale),
+            "kind": self.kind,
+        })
+
 
 def link_down(window: int, src: int, dst: int) -> LinkEvent:
     return LinkEvent(window, src, dst, 0.0)

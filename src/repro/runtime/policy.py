@@ -202,6 +202,21 @@ class ReplanPolicy:
         self._breach = 0
         self._last_trigger = window
 
+    def state_snapshot(self) -> dict:
+        """The trigger state machine as one numeric-only dict (DESIGN.md
+        §11) — armed/breach/backoff internals that previously had no
+        outward-facing surface, for the flight recorder's gauges and for
+        post-mortem "why didn't it replan?" queries."""
+        return {
+            "armed": bool(self._armed),
+            "breach": int(self._breach),
+            "last_trigger": self._last_trigger,
+            "pressure_window": self._pressure_window,
+            "flap_level": int(self._flap_level),
+            "topo_block_until": self._topo_block_until,
+            "deferred_topo": bool(self._deferred_topo),
+        }
+
     # -- flap backoff ----------------------------------------------------------
     def _flap_blocked(self, window: int) -> bool:
         """Inside the topology-trigger backoff window?"""

@@ -220,6 +220,21 @@ class LinkTelemetry:
             return None
         return np.sum(mats, axis=0)
 
+    def health(self) -> dict:
+        """Compact numeric-only health snapshot for the metrics registry
+        (DESIGN.md §11) — no schema envelope, no arrays, so the flight
+        recorder's collectors can map it straight onto gauges."""
+        last = self.latest(1)
+        return {
+            "windows": int(self._count),
+            "retained": len(self),
+            "rejected": int(self.rejected),
+            "utilization_imbalance": self.utilization_imbalance(),
+            "last_completion_s": (
+                float(last[0].completion_s) if last else 0.0
+            ),
+        }
+
     def aggregate(self, last_k: Optional[int] = None) -> dict:
         idx = self._live_idx(last_k)
         return tag(

@@ -192,6 +192,7 @@ class ServeReport:
     jain_index: float
     fault_digest: Optional[str] = None
     fairness: Optional[dict] = None     # fabric fairness (adaptive arm)
+    metrics: Optional[dict] = None      # nimble.metrics/v1 (recorder runs)
 
     @property
     def total_completion_s(self) -> float:
@@ -240,17 +241,28 @@ class ServeReport:
             payload["fault_digest"] = self.fault_digest
         if self.fairness is not None:
             payload["fairness"] = self.fairness
+        if self.metrics is not None:
+            payload["metrics"] = self.metrics
         return tag("serve", payload)
 
 
 class ControlPlane:
     """Run one scenario end-to-end: spawn → serve → drill → retire."""
 
-    def __init__(self, spec: ScenarioSpec, mode: str = "adaptive"):
+    def __init__(self, spec: ScenarioSpec, mode: str = "adaptive",
+                 recorder=None):
         if mode not in SERVE_MODES:
             raise ValueError(f"unknown mode {mode!r}; one of {SERVE_MODES}")
         self.spec = spec
         self.mode = mode
+        # flight recorder (repro.obs.FlightRecorder, duck-typed): threaded
+        # down to every spawned Session so the whole scenario records under
+        # one correlation id; None / disabled keeps this path byte-free
+        self._obs = (
+            recorder
+            if recorder is not None and getattr(recorder, "enabled", False)
+            else None
+        )
         self.topo_base = spec.topology.build()
         self.schedule: Optional[FaultSchedule] = (
             FaultInjector(self.topo_base).compile(spec.faults)
@@ -292,6 +304,11 @@ class ControlPlane:
 
         def spawn(t: TenantSpec, w: int) -> None:
             demand0 = t.traffic.demand(w, n)
+            if self._obs is not None:
+                self._obs.tracer.instant(
+                    "spawn", "serve", "cluster",
+                    {"tenant": t.name, "window": w, "mode": self.mode},
+                )
             if adaptive:
                 sess = Session(SessionSpec(
                     topology=self.topo_base,
@@ -301,7 +318,7 @@ class ControlPlane:
                     weight=t.weight,
                     fabric=arbiter,
                     initial_demand=demand0,
-                ))
+                ), recorder=self._obs)
                 # a tenant joining a degraded fabric must degrade *now*:
                 # replay the cumulative overrides into its local window 0
                 for (src, dst), scale in sorted(overrides.items()):
@@ -322,8 +339,22 @@ class ControlPlane:
             led = ledgers[name]
             led.left = w
             led.crashed = crashed
+            if self._obs is not None:
+                self._obs.tracer.instant(
+                    "retire", "serve", "cluster",
+                    {"tenant": name, "window": w, "crashed": crashed},
+                )
 
         for w in range(spec.windows):
+            if self._obs is not None:
+                tr = self._obs.tracer
+                tr.advance_to(w * 1000)
+                w_span = tr.begin(
+                    "scenario-window", "serve", "cluster",
+                    {"window": w, "scenario": spec.name, "mode": self.mode},
+                )
+            else:
+                w_span = None
             # retire: scheduled departures, then crash-silenced tenants
             for t in self.roster:
                 if t.leave_window == w and t.name in live:
@@ -343,6 +374,13 @@ class ControlPlane:
             # fault events due at this scenario window
             due = events_by_window.get(w)
             if due:
+                if self._obs is not None:
+                    for ev in due:
+                        self._obs.tracer.instant(
+                            "fault", "serve", "cluster",
+                            {"event": ev.describe(), "kind": ev.kind,
+                             "window": w},
+                        )
                 batch = dict(merge_overrides(due))
                 overrides.update(batch)
                 topo_now = self.topo_base.with_link_scale(overrides)
@@ -398,14 +436,51 @@ class ControlPlane:
                 window_latency.append(lat)
                 cluster_ring.add(lat)
             else:
+                lat = 0.0
                 window_latency.append(0.0)
+            if w_span is not None:
+                obs = self._obs
+                obs.tracer.instant(
+                    "drain", "serve", "cluster",
+                    {"window": w, "latency_s": round(lat, 6),
+                     "tenants": len(live)},
+                )
+                obs.tracer.end(w_span, {"latency_s": round(lat, 6)})
+                obs.metrics.histogram(
+                    "nimble_serve_window_latency_s",
+                    {"scenario": spec.name, "mode": self.mode},
+                ).observe(lat)
+                obs.metrics.gauge(
+                    "nimble_serve_live_tenants",
+                    {"scenario": spec.name, "mode": self.mode},
+                ).set(len(live))
 
-        # fairness snapshot BEFORE teardown — unregister withdraws loads
+        # fairness snapshot BEFORE teardown — unregister withdraws loads;
+        # same for the metrics registry, which pulls from live runtimes
         fairness = arbiter.fairness_report() if arbiter is not None else None
+        metrics = self._collect_metrics(live, arbiter)
         for name in list(live):
             retire(name, spec.windows)
 
-        return self._finalize(window_latency, ledgers, fairness)
+        return self._finalize(window_latency, ledgers, fairness, metrics)
+
+    def _collect_metrics(self, live: Dict[str, object],
+                         arbiter: Optional[FabricArbiter]) -> Optional[dict]:
+        """Pull every live layer into the recorder's registry and snapshot
+        it (``nimble.metrics/v1``) — ``None`` without a recorder, keeping
+        ``nimble.serve/v1`` byte-identical to the pre-obs schema."""
+        if self._obs is None:
+            return None
+        from ..obs import collect_arbiter, collect_runtime
+
+        reg = self._obs.metrics
+        if self.mode == "adaptive":
+            for name, sess in live.items():
+                if getattr(sess, "runtime", None) is not None:
+                    collect_runtime(reg, sess.runtime, tenant=name)
+        if arbiter is not None:
+            collect_arbiter(reg, arbiter)
+        return reg.snapshot()
 
     # -- accounting --------------------------------------------------------------
     def _finalize(
@@ -413,6 +488,7 @@ class ControlPlane:
         window_latency: List[float],
         ledgers: Dict[str, TenantLedger],
         fairness: Optional[dict],
+        metrics: Optional[dict] = None,
     ) -> ServeReport:
         spec, schedule = self.spec, self.schedule
         lats = np.asarray(window_latency, dtype=np.float64)
@@ -482,19 +558,25 @@ class ControlPlane:
                 schedule.digest() if schedule is not None else None
             ),
             fairness=fairness,
+            metrics=metrics,
         )
 
 
 # -- entry points -----------------------------------------------------------------
 
-def run_scenario(spec: ScenarioSpec, mode: str = "adaptive") -> ServeReport:
-    """One arm of one scenario, end to end."""
-    return ControlPlane(spec, mode=mode).run()
+def run_scenario(spec: ScenarioSpec, mode: str = "adaptive",
+                 recorder=None) -> ServeReport:
+    """One arm of one scenario, end to end (optionally flight-recorded)."""
+    return ControlPlane(spec, mode=mode, recorder=recorder).run()
 
 
-def evaluate_scenario(spec: ScenarioSpec) -> dict:
-    """Both arms plus the SLO verdict — the serve_slo gate's unit of work."""
-    adaptive = run_scenario(spec, "adaptive")
+def evaluate_scenario(spec: ScenarioSpec, recorder=None) -> dict:
+    """Both arms plus the SLO verdict — the serve_slo gate's unit of work.
+
+    A recorder, when given, records the **adaptive** arm only: the static
+    arm is the unpriced baseline and must stay untouched by observability.
+    """
+    adaptive = run_scenario(spec, "adaptive", recorder=recorder)
     static = run_scenario(spec, "static")
     return {
         "scenario": spec.name,

@@ -1,0 +1,456 @@
+"""Flight recorder: tracing, metrics, provenance, disabled path (ISSUE 8).
+
+The observability contract (DESIGN.md §11), pinned:
+
+  * the exported ``nimble.trace/v1`` is valid Chrome/Perfetto trace JSON
+    — sorted timestamps, matched B/E pairs, non-overlapping X spans per
+    track, one correlation id on every event — and the validator rejects
+    each class of malformed trace;
+  * one correlation id propagates Session -> runtime -> arbiter (and
+    ControlPlane -> all four layers in a serve run);
+  * metrics snapshots are deterministic and round-trip bit-exactly
+    through ``repro.jsonio``;
+  * every swap carries a queryable provenance record with the full
+    issue -> ready -> swapped lifecycle (watchdog abandonment included);
+  * a runtime WITHOUT a recorder is bit-identical to the pre-obs code on
+    the ``bench_runtime_adapt`` drift trace, and a runtime WITH one
+    produces the same simulation outputs (tracing observes, never
+    steers).
+"""
+
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import Session, SessionSpec
+from repro.core.topology import Topology
+from repro.jsonio import (
+    read_json_file,
+    schema_kind,
+    schema_version,
+    write_json_file,
+)
+from repro.obs import (
+    FlightRecorder,
+    MetricsRegistry,
+    PlanProvenance,
+    ProvenanceLog,
+    Tracer,
+    collect_runtime,
+    validate_trace,
+)
+from repro.runtime import (
+    EventLog,
+    OrchestrationRuntime,
+    balanced_trace,
+    drifting_skew_trace,
+    link_down,
+)
+from repro.serve import get_scenario, run_scenario
+
+pytestmark = pytest.mark.obs
+
+N = 8
+GROUP = 4
+
+
+def _topo() -> Topology:
+    return Topology(N, group_size=GROUP)
+
+
+def _run_drift(recorder=None, windows: int = 24):
+    rt = OrchestrationRuntime(_topo(), recorder=recorder)
+    res = rt.run_trace(drifting_skew_trace(N, windows, dwell=8))
+    return rt, res
+
+
+# -- trace validity ---------------------------------------------------------------
+
+
+class TestTraceExport:
+    def test_drift_trace_is_valid(self):
+        rec = FlightRecorder("t-corr")
+        _run_drift(rec)
+        info = validate_trace(rec.export_trace())
+        assert info["events"] > 0
+        assert info["correlation_id"] == "t-corr"
+        assert {"runtime", "planner"} <= set(info["cats"])
+
+    def test_timestamps_sorted_and_x_spans_have_durations(self):
+        rec = FlightRecorder()
+        _run_drift(rec)
+        events = rec.export_trace()["traceEvents"]
+        ts = [e["ts"] for e in events if e["ph"] != "M"]
+        assert ts == sorted(ts)
+        for e in events:
+            if e["ph"] == "X":
+                assert e["dur"] >= 0
+
+    def test_every_event_carries_the_correlation_id(self):
+        rec = FlightRecorder("corr-7")
+        _run_drift(rec)
+        for e in rec.export_trace()["traceEvents"]:
+            if e["ph"] != "M":
+                assert e["args"]["corr"] == "corr-7"
+
+    def test_window_spans_align_to_window_clock(self):
+        rec = FlightRecorder()
+        _run_drift(rec, windows=6)
+        windows = [
+            e for e in rec.export_trace()["traceEvents"]
+            if e["ph"] == "X" and e["name"] == "window"
+        ]
+        assert len(windows) == 6
+        # the causal clock pins window w's span at >= w ms
+        for e in windows:
+            assert e["ts"] >= e["args"]["window"] * 1000
+
+    def test_export_is_tagged_and_json_native(self):
+        rec = FlightRecorder()
+        _run_drift(rec, windows=4)
+        trace = rec.export_trace()
+        assert schema_kind(trace) == "trace"
+        assert schema_version(trace) == 1
+        json.dumps(trace)  # raises on non-native types
+
+
+class TestTraceValidator:
+    def _minimal(self):
+        tr = Tracer("v")
+        with tr.span("solve", "planner", "t0", {"window": 0}):
+            pass
+        tr.instant("swap", "runtime", "t0", {"window": 1})
+        return tr.export()
+
+    def test_accepts_minimal_trace(self):
+        validate_trace(self._minimal())
+
+    def test_rejects_wrong_schema(self):
+        bad = self._minimal()
+        bad["schema"] = "nimble.metrics/v1"
+        with pytest.raises(ValueError, match="trace"):
+            validate_trace(bad)
+
+    def test_rejects_unsorted_timestamps(self):
+        bad = copy.deepcopy(self._minimal())
+        real = [e for e in bad["traceEvents"] if e["ph"] != "M"]
+        real[0]["ts"] = 10**9
+        with pytest.raises(ValueError, match="sorted"):
+            validate_trace(bad)
+
+    def test_open_begin_is_never_exported(self):
+        # the Tracer's begin/end model emits one X on end — an abandoned
+        # begin leaves no dangling event, so every export validates
+        tr = Tracer("v")
+        tr.begin("window", "runtime", "t0", {})
+        tr.instant("swap", "runtime", "t0", {})
+        info = validate_trace(tr.export())
+        assert info["spans"] == 0 and info["events"] == 1
+
+    def test_rejects_unmatched_begin(self):
+        bad = copy.deepcopy(self._minimal())
+        bad["traceEvents"].append({
+            "name": "window", "cat": "runtime", "ph": "B",
+            "ts": 10**6, "pid": 1, "tid": 2, "args": {"corr": "v"},
+        })
+        with pytest.raises(ValueError, match="[Uu]nmatched"):
+            validate_trace(bad)
+
+    def test_rejects_mixed_correlation_ids(self):
+        bad = copy.deepcopy(self._minimal())
+        for e in bad["traceEvents"]:
+            if e["ph"] != "M":
+                e["args"]["corr"] = "other"
+                break
+        with pytest.raises(ValueError, match="correlation"):
+            validate_trace(bad)
+
+    def test_rejects_negative_x_duration(self):
+        bad = copy.deepcopy(self._minimal())
+        for e in bad["traceEvents"]:
+            if e["ph"] == "X":
+                e["dur"] = -5
+        with pytest.raises(ValueError, match="dur"):
+            validate_trace(bad)
+
+
+# -- correlation propagation ------------------------------------------------------
+
+
+class TestCorrelationPropagation:
+    def test_session_runtime_arbiter_share_one_id(self):
+        rec = FlightRecorder("one-id")
+        with Session(
+            SessionSpec(
+                topology=_topo(), adaptivity="arbitrated", tenant="t0"
+            ),
+            recorder=rec,
+        ) as sess:
+            trace = drifting_skew_trace(N, 8, dwell=4)
+            for w in range(8):
+                sess.step(trace[w])
+        info = validate_trace(rec.export_trace())
+        assert info["correlation_id"] == "one-id"
+        assert {"runtime", "planner", "fabric"} <= set(info["cats"])
+
+    def test_serve_scenario_covers_all_four_layers(self):
+        rec = FlightRecorder()
+        run_scenario(get_scenario("minimal"), "adaptive", recorder=rec)
+        info = validate_trace(rec.export_trace())
+        assert {"serve", "runtime", "fabric", "planner"} <= set(info["cats"])
+
+    def test_spans_nest_within_the_window_span(self):
+        rec = FlightRecorder()
+        _run_drift(rec)
+        events = rec.export_trace()["traceEvents"]
+        windows = [
+            (e["ts"], e["ts"] + e["dur"])
+            for e in events
+            if e["ph"] == "X" and e["name"] == "window"
+        ]
+        solves = [
+            e for e in events if e["ph"] == "X" and e["name"] == "solve"
+        ]
+        # every post-warmup solve happens inside some window span
+        for s in solves[1:]:
+            assert any(
+                lo <= s["ts"] and s["ts"] + s["dur"] <= hi
+                for lo, hi in windows
+            ), f"solve at ts={s['ts']} outside every window span"
+
+    def test_disabled_recorder_records_nothing(self):
+        rec = FlightRecorder.disabled()
+        rt, _ = _run_drift(rec)
+        assert rt._obs is None
+        assert len(rec.tracer) == 0
+        assert len(rec.provenance) == 0
+
+
+# -- metrics ----------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_snapshot_round_trips_through_jsonio(self, tmp_path):
+        rt, _ = _run_drift()
+        reg = MetricsRegistry()
+        collect_runtime(reg, rt, tenant="t0")
+        snap = reg.snapshot()
+        assert schema_kind(snap) == "metrics"
+        path = str(tmp_path / "metrics.json")
+        write_json_file(path, snap)
+        back = read_json_file(path)
+        assert back == snap
+        assert json.dumps(back, sort_keys=True) == json.dumps(
+            snap, sort_keys=True
+        )
+
+    def test_snapshot_is_deterministic(self):
+        rt, _ = _run_drift()
+        reg1, reg2 = MetricsRegistry(), MetricsRegistry()
+        collect_runtime(reg1, rt, tenant="t0")
+        collect_runtime(reg2, rt, tenant="t0")
+        assert reg1.snapshot() == reg2.snapshot()
+
+    def test_absorbs_scattered_stats(self):
+        rt, _ = _run_drift()
+        reg = MetricsRegistry()
+        collect_runtime(reg, rt, tenant="t0")
+        by_name = {
+            m["name"]: m for m in reg.snapshot()["metrics"]
+        }
+        assert by_name["nimble_runtime_replans_total"]["value"] == float(
+            rt.stats.replans
+        )
+        assert by_name["nimble_runtime_reprices_total"]["value"] == float(
+            rt.stats.reprices
+        )
+        assert by_name["nimble_estimator_confidence"]["value"] == float(
+            rt.estimator.confidence
+        )
+        assert by_name["nimble_telemetry_rejected_records_total"][
+            "value"
+        ] == float(rt.telemetry.rejected)
+        assert by_name["nimble_runtime_replans_total"]["labels"] == {
+            "tenant": "t0"
+        }
+
+    def test_counter_rejects_negative_and_kind_conflicts(self):
+        reg = MetricsRegistry()
+        c = reg.counter("nimble_x_total")
+        with pytest.raises(ValueError):
+            c.inc(-1)
+        with pytest.raises(ValueError):
+            reg.gauge("nimble_x_total")
+        with pytest.raises(ValueError):
+            reg.counter("Bad-Name")
+
+    def test_histogram_buckets_and_stats(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("nimble_lat_s", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 5.0):
+            h.observe(v)
+        (rec,) = reg.snapshot()["metrics"]
+        assert rec["count"] == 3
+        assert rec["min"] == 0.05 and rec["max"] == 5.0
+        assert rec["buckets"] == [[0.1, 1], [1.0, 1], ["+inf", 1]]
+
+    def test_session_report_embeds_metrics(self):
+        with Session(
+            SessionSpec(topology=_topo(), adaptivity="adaptive")
+        ) as sess:
+            trace = balanced_trace(N, 3)
+            for w in range(3):
+                sess.step(trace[w])
+            rep = sess.report()
+        assert schema_kind(rep["metrics"]) == "metrics"
+        names = {m["name"] for m in rep["metrics"]["metrics"]}
+        assert "nimble_estimator_confidence" in names
+
+    def test_window_report_carries_confidence_and_rejections(self):
+        _, res = _run_drift()
+        last = res.reports[-1]
+        assert last.confidence == 1.0
+        assert last.telemetry_rejected == 0
+
+
+# -- provenance -------------------------------------------------------------------
+
+
+class TestProvenance:
+    def test_every_swap_has_a_record(self):
+        rec = FlightRecorder()
+        rt, _ = _run_drift(rec)
+        swapped = rec.provenance.swapped()
+        assert len(swapped) == rt.stats.swaps
+        for p in swapped:
+            assert p.swapped_window is not None
+            assert p.trigger in (
+                "initial", "congestion", "topology", "staleness",
+                "fabric", "watchdog", "reprice",
+            )
+            assert p.signature
+            assert p.source in ("solve", "cache")
+
+    def test_initial_plan_is_recorded_but_not_swapped(self):
+        rec = FlightRecorder()
+        rt = OrchestrationRuntime(_topo(), recorder=rec)
+        (first,) = rec.provenance.records()
+        assert first.trigger == "initial"
+        assert not first.swapped
+        del rt
+
+    def test_cache_hit_flag(self):
+        rec = FlightRecorder()
+        rt, _ = _run_drift(rec, windows=36)
+        if rt.stats.cache_hits:
+            assert any(p.cache_hit for p in rec.provenance)
+        assert any(not p.cache_hit for p in rec.provenance)
+
+    def test_topology_trigger_carries_fault_context(self):
+        rec = FlightRecorder()
+        rt = OrchestrationRuntime(_topo(), recorder=rec)
+        trace = balanced_trace(N, 12)
+        events = EventLog([link_down(4, 0, GROUP)])
+        rt.run_trace(trace, events=events)
+        topo_plans = [
+            p for p in rec.provenance if p.trigger == "topology"
+        ]
+        assert topo_plans
+        assert any(
+            "link_down" in ctx
+            for p in topo_plans
+            for ctx in p.fault_context
+        )
+
+    def test_lifecycle_marks(self):
+        log = ProvenanceLog()
+        p = log.issue(
+            tenant="t", version=3, source="solve", trigger="congestion",
+            cache_hit=False, issued_window=5, signature="abc123",
+            demand_bytes=1e9, baseline_ratio=1.2,
+            planner={"engine": "mwu"},
+        )
+        assert not p.swapped
+        p.mark_ready(6)
+        p.mark_swapped(7, prices=np.array([0.0, 1.0]), rel_change=0.25,
+                       repriced=True)
+        assert p.swapped and p.ready_window == 6 and p.swapped_window == 7
+        assert p.repriced and p.reprice_rel_change == 0.25
+        assert p.prices_at_swap["max"] == 1.0
+        obj = p.to_json_obj()
+        assert schema_kind(obj) == "plan_provenance"
+        json.dumps(obj)
+
+    def test_queryable_after_run(self):
+        rec = FlightRecorder()
+        _run_drift(rec)
+        log = rec.provenance
+        assert log.for_tenant("runtime")
+        v = log.for_tenant("runtime")[0].version
+        assert log.find(version=v)
+        assert schema_kind(log.to_json_obj()) == "provenance_log"
+
+    def test_watchdog_abandonment(self):
+        log = ProvenanceLog()
+        p = log.issue(
+            tenant="t", version=1, source="solve", trigger="congestion",
+            cache_hit=False, issued_window=0, signature="s",
+            demand_bytes=1.0, baseline_ratio=1.0, planner={},
+        )
+        p.mark_abandoned()
+        assert p.abandoned is True and not p.swapped
+
+
+# -- the disabled path is bit-identical -------------------------------------------
+
+
+class TestDisabledPathIdentical:
+    def test_no_recorder_matches_recorder_run_exactly(self):
+        trace = drifting_skew_trace(N, 24, dwell=8)
+        plain = OrchestrationRuntime(_topo()).run_trace(trace)
+        traced_rt = OrchestrationRuntime(
+            _topo(), recorder=FlightRecorder()
+        )
+        traced = traced_rt.run_trace(trace)
+        assert json.dumps(plain.to_json_obj(), sort_keys=True) == json.dumps(
+            traced.to_json_obj(), sort_keys=True
+        )
+        for a, b in zip(plain.reports, traced.reports):
+            assert a == b
+
+    def test_session_reports_identical_modulo_metrics(self):
+        trace = drifting_skew_trace(N, 12, dwell=4)
+
+        def run(recorder):
+            with Session(
+                SessionSpec(topology=_topo(), adaptivity="adaptive"),
+                recorder=recorder,
+            ) as sess:
+                res = sess.run_trace(trace)
+                rep = sess.report()
+            return res, rep
+
+        res_a, rep_a = run(None)
+        res_b, rep_b = run(FlightRecorder())
+        assert json.dumps(res_a.to_json_obj(), sort_keys=True) == json.dumps(
+            res_b.to_json_obj(), sort_keys=True
+        )
+        # the embedded metrics may legitimately differ (the recorder's
+        # registry has per-window histograms); everything else must not
+        rep_a.pop("metrics")
+        rep_b.pop("metrics")
+        assert rep_a == rep_b
+
+    def test_serve_report_identical_with_recorder(self):
+        spec = get_scenario("minimal")
+        with_rec = run_scenario(
+            spec, "adaptive", recorder=FlightRecorder()
+        ).to_json_obj()
+        without = run_scenario(spec, "adaptive").to_json_obj()
+        assert "metrics" not in without
+        with_rec.pop("metrics")
+        assert json.dumps(with_rec, sort_keys=True) == json.dumps(
+            without, sort_keys=True
+        )
