@@ -1,0 +1,110 @@
+"""Static-analysis gate: the analyzer's own verdict on src/repro (§12).
+
+Unlike the other benches this one measures *conventions*, not wall
+clock: it runs the full ``repro.analysis`` rule registry over
+``src/repro`` with the committed baseline and checks that
+
+  * the tree is **clean** — zero live findings (suppressed and
+    baselined ones are counted but do not fail the gate; the ``src/``
+    baseline ships empty, so in practice only suppressions absorb
+    anything);
+  * ``schemas.lock.json`` is **fresh** — regenerating it from the
+    current sources is a byte-level no-op, so no ``tag()`` call grew a
+    key or bumped a version without going through the lock.
+
+Metrics land in ``BENCH_lint.json`` (tagged ``nimble.bench_lint/v1``);
+``validate_lint`` is the ``static_gate`` in ``benchmarks/run.py
+--smoke``.  Injecting any violation into a scoped layer (say a
+``time.time()`` in ``repro/fabric/``) flips ``clean`` to false and the
+gate raises — that teeth check is pinned by
+``tests/test_analysis.py::test_injected_violation_is_caught``.
+
+Analyzer wall-clock is reported (``lint_wall_us``) but volatile — the
+gate is the verdict, not the speed.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.analysis import (
+    RULES,
+    analyze_paths,
+    default_baseline_path,
+    default_lock_path,
+    load_baseline,
+    lock_is_fresh,
+)
+from repro.analysis.engine import build_contexts
+
+from .common import emit
+
+SRC_REPRO = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "src", "repro",
+)
+
+
+def lint_section() -> dict:
+    t0 = time.perf_counter()
+    report = analyze_paths(
+        [SRC_REPRO],
+        baseline=load_baseline(default_baseline_path()),
+        rel_to=os.path.dirname(SRC_REPRO),
+    )
+    contexts = build_contexts([SRC_REPRO], rel_to=os.path.dirname(SRC_REPRO))
+    fresh = lock_is_fresh(default_lock_path(), contexts)
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    emit(
+        "lint/analyze", wall_us,
+        f"files={report.files} findings={len(report.findings)} "
+        f"suppressed={len(report.suppressed)} "
+        f"baselined={len(report.baselined)} lock_fresh={fresh}",
+    )
+    return {
+        "files": report.files,
+        "rules": len(RULES),
+        "findings": len(report.findings),
+        "suppressed": len(report.suppressed),
+        "baselined": len(report.baselined),
+        "clean": report.clean,
+        "lock_fresh": fresh,
+        "lint_wall_us": wall_us,
+    }
+
+
+def validate_lint(metrics: dict) -> None:
+    """The ``static_gate``: clean tree + fresh lock, or raise."""
+    if not metrics["clean"]:
+        raise AssertionError(
+            f"static analysis found {metrics['findings']} live finding(s) "
+            "over src/repro — run `python -m repro.analysis` for the list; "
+            "fix them or suppress with a written reason"
+        )
+    if not metrics["lock_fresh"]:
+        raise AssertionError(
+            "schemas.lock.json is stale — emitted schema kinds/keys changed "
+            "without regenerating it; run "
+            "`python -m repro.analysis --write-lock` and commit the result"
+        )
+    if metrics["files"] < 50:
+        raise AssertionError(
+            f"analyzer only saw {metrics['files']} files — src/repro "
+            "discovery is broken, the clean verdict is vacuous"
+        )
+
+
+def smoke() -> dict:
+    return lint_section()
+
+
+def run() -> dict:
+    return lint_section()
+
+
+if __name__ == "__main__":
+    m = run()
+    validate_lint(m)
+    print(f"# lint: clean={m['clean']} lock_fresh={m['lock_fresh']}")

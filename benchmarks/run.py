@@ -13,6 +13,7 @@ writes the aggregate to benchmarks/results.csv.
   (arbiter)   bench_fairness        multi-tenant arbitration + Jain fairness
   (faults)    bench_faults          fault drills: flap/blackout/crash recovery
   (serve)     bench_serve           serving control plane: scenario SLO drills
+  (lint)      bench_lint            static invariant checker verdict
   (extra)     bench_kernels         kernel micro-benches
 
 ``--smoke`` runs the planner-overhead, runtime-adaptation, fairness,
@@ -34,11 +35,15 @@ leaves the survivor's steady state within 2% of a never-churned run),
 ``obs_overhead`` validates the flight-recorder contract of ISSUE 8 (a
 traced drift run byte-identical to the untraced one and within 3%
 wall-clock, with a valid ``nimble.trace/v1`` export — writes
-``BENCH_obs.json``), and ``session_api`` pushes one arbitrated two-tenant
-window through the ``repro.api.Session`` facade with the exported JSON
-validated against the ``nimble.fabric_fairness/v1`` schema (the full
-facade selfcheck — including the serving check 6 and the tracing check 7
-— is ``python -m repro.api.selfcheck``).
+``BENCH_obs.json``), ``static_gate`` runs the ``repro.analysis``
+invariant checker over ``src/repro`` (ISSUE 9: zero live findings with
+the shipped empty baseline, plus ``schemas.lock.json`` freshness —
+writes ``BENCH_lint.json``), and ``session_api`` pushes one arbitrated
+two-tenant window through the ``repro.api.Session`` facade with the
+exported JSON validated against the ``nimble.fabric_fairness/v1`` schema
+(the full facade selfcheck — including the serving check 6, the tracing
+check 7, and the static-analysis check 8 — is
+``python -m repro.api.selfcheck``).
 
 ``--compare`` re-runs the smoke benches and diffs every numeric metric
 against the committed ``BENCH_*.json`` baselines, printing a per-metric
@@ -119,6 +124,7 @@ def smoke() -> None:
         bench_algo_overhead,
         bench_fairness,
         bench_faults,
+        bench_lint,
         bench_obs,
         bench_runtime_adapt,
         bench_serve,
@@ -215,6 +221,20 @@ def smoke() -> None:
         f"trace_events={obs_metrics['trace_events']} "
         f"{'OK' if gates['obs_overhead'] else 'FAIL'}"
     )
+    print("# --- lint (smoke) ---")
+    lint_metrics = bench_lint.smoke()
+    out7 = _write_metrics("BENCH_lint.json", lint_metrics, kind="bench_lint")
+    print("# --- static_gate (smoke) ---")
+    # static invariant checker (ISSUE 9): zero live findings over
+    # src/repro with the shipped empty baseline + fresh schemas.lock.json
+    _gate("static_gate", lambda: bench_lint.validate_lint(lint_metrics))
+    print(
+        f"# static_gate: {lint_metrics['files']} files, "
+        f"{lint_metrics['findings']} finding(s), "
+        f"{lint_metrics['suppressed']} suppressed, "
+        f"lock_fresh={lint_metrics['lock_fresh']} "
+        f"{'OK' if gates['static_gate'] else 'FAIL'}"
+    )
     print("# --- session_api (smoke) ---")
     from repro.api.selfcheck import smoke_session_check
 
@@ -240,12 +260,16 @@ def smoke() -> None:
         "serve_flap": f"{serve_metrics['flap_under_load']['win']:.4f}x",
         "serve_churn_tail": f"{serve_metrics['churn']['tail_ratio']:.4f}x",
         "obs_overhead": f"{obs_metrics['overhead_ratio']:.4f}x",
+        "lint": (
+            f"{'clean' if lint_metrics['clean'] else 'DIRTY'}"
+            f"({lint_metrics['files']}f)"
+        ),
     }
     stamp = _append_trajectory_row(gates, headline)
     print(f"# trajectory: appended {stamp} row to {RESULTS_CSV}")
     print(
         f"# wrote {len(common.ROWS)} rows; metrics -> {out}, {out2}, "
-        f"{out3}, {out4}, {out5}, {out6}"
+        f"{out3}, {out4}, {out5}, {out6}, {out7}"
     )
     if gate_errors:
         name, exc = gate_errors[0]
@@ -259,6 +283,7 @@ def main() -> None:
         bench_fairness,
         bench_faults,
         bench_kernels,
+        bench_lint,
         bench_moe_e2e,
         bench_multitenant,
         bench_obs,
@@ -283,6 +308,7 @@ def main() -> None:
         ("faults", bench_faults),
         ("serve", bench_serve),
         ("obs", bench_obs),
+        ("lint", bench_lint),
         ("kernels", bench_kernels),
     ]
     metric_files = {
@@ -291,6 +317,7 @@ def main() -> None:
         "faults": ("BENCH_faults.json", "bench_faults"),
         "serve": ("BENCH_serve.json", "serve"),
         "obs": ("BENCH_obs.json", "bench_obs"),
+        "lint": ("BENCH_lint.json", "bench_lint"),
     }
     print("name,us_per_call,derived")
     for name, mod in sections:
@@ -326,6 +353,7 @@ BENCH_FILES = (
     "BENCH_faults.json",
     "BENCH_serve.json",
     "BENCH_obs.json",
+    "BENCH_lint.json",
 )
 
 #: metric-path fragments whose values are wall-clock (machine-dependent)

@@ -15,9 +15,11 @@ door.  See DESIGN.md §5.)
 
 Then attaches a :class:`repro.obs.FlightRecorder` to a short adaptive run
 — one object captures a Perfetto-openable trace, a metrics snapshot, and
-a plan-provenance audit trail (DESIGN.md §11) — and finally instantiates
-one of the assigned model architectures (reduced size) and runs a forward
-pass, showing the model registry side of the framework.
+a plan-provenance audit trail (DESIGN.md §11) — instantiates one of the
+assigned model architectures (reduced size) and runs a forward pass, and
+closes with the static invariant checker (DESIGN.md §12) flagging a
+deliberately broken fixture, the same engine that keeps ``src/repro``
+clean via ``python -m repro.analysis``.
 
 Run:
     PYTHONPATH=src python examples/quickstart.py
@@ -108,6 +110,22 @@ def main():
     logits, _ = model.forward(params, {"tokens": toks})
     print(f"\nmodel {cfg.name}: {n_par / 1e6:.2f}M params, "
           f"logits {logits.shape}, finite={bool(jnp.isfinite(logits).all())}")
+
+    # ---- 4. static invariant checker: lint a fixture (DESIGN.md §12) -------
+    from repro.analysis import analyze_source
+
+    fixture = (
+        "import time\n"
+        "def schedule(tenants):\n"
+        "    return time.time()\n"        # wall-clock in a core/ path
+    )
+    report = analyze_source(fixture, path="repro/core/fixture.py")
+    print(f"\nstatic checker: {len(report.findings)} finding(s) in a "
+          "deliberately broken fixture")
+    for f in report.findings:
+        print(f"  {f}")
+    # the committed tree must stay clean — the same engine gates the repo:
+    #   PYTHONPATH=src python -m repro.analysis
 
 
 if __name__ == "__main__":

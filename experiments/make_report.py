@@ -7,8 +7,9 @@ holds a ``BENCH_runtime_adapt.json`` (tagged ``nimble.bench_runtime_adapt``
 via the shared ``repro.jsonio`` schema), the fabric-arbiter fairness
 section from ``BENCH_fairness.json`` (``nimble.bench_fairness``), the
 fault-drill section from ``BENCH_faults.json`` (``nimble.bench_faults``),
-and the serving-control-plane SLO table from ``BENCH_serve.json``
-(``nimble.serve``, DESIGN.md §10).
+the serving-control-plane SLO table from ``BENCH_serve.json``
+(``nimble.serve``, DESIGN.md §10), and the static-analysis verdict line
+from ``BENCH_lint.json`` (``nimble.bench_lint``, DESIGN.md §12).
 """
 
 import glob
@@ -278,6 +279,20 @@ def obs_section():
     )
 
 
+def lint_section():
+    """One-line static-analysis verdict from BENCH_lint.json (§12)."""
+    rec = _load_tagged("BENCH_lint.json", "bench_lint")
+    if rec is None:
+        return
+    print("\n### Static analysis (invariant checker)\n")
+    print(
+        f"{'clean' if rec['clean'] else 'DIRTY'}: {rec['files']} files, "
+        f"{rec['rules']} rules, {rec['findings']} live finding(s) "
+        f"({rec['suppressed']} suppressed, {rec['baselined']} baselined), "
+        f"schema lock {'fresh' if rec['lock_fresh'] else 'STALE'}"
+    )
+
+
 def main():
     base = load("*_16x16_nimble.json")
     opt = load("*_16x16_nimble_alt0.25_opt.json")
@@ -310,6 +325,7 @@ def main():
     faults_section()
     serve_section()
     obs_section()
+    lint_section()
 
 
 if __name__ == "__main__":

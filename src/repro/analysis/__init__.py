@@ -1,0 +1,72 @@
+"""NIMBLE-aware static invariant checker (DESIGN.md §12).
+
+The repo's core contract — "preserves ordering, determinism, and low
+overhead" — is re-stated as *conventions* in many places: jit entry
+points must stay retrace-free, ``core``/``fabric``/``faults`` must stay
+seed-deterministic, every cross-file record carries a frozen
+``nimble.<kind>/vN`` schema, frozen specs stay frozen, and NaN is a
+telemetry sentinel that must never meet ``==``.  Runtime tests catch
+violations after the fact; this package catches them before: an
+AST-based lint engine (stdlib ``ast``, no new deps) with
+
+  * a :class:`~repro.analysis.engine.Rule` protocol + registry
+    (:data:`RULES`) of repo-specific rules (``jit-purity``,
+    ``determinism``, ``schema-discipline``, ``frozen-spec``,
+    ``float-eq``, plus ``suppression`` hygiene);
+  * a shared per-file resolution context
+    (:class:`~repro.analysis.context.FileContext`): import/alias
+    resolution, decorator chains, frozen-dataclass detection, known jit
+    entry points and ``lax.scan`` bodies;
+  * inline suppressions — ``# nimble: ignore[<rule-id>] -- reason`` —
+    with a mandatory written justification;
+  * a committed baseline (``baseline.json``) for grandfathered findings
+    (ships empty for ``src/``);
+  * a generated ``schemas.lock.json`` key manifest the schema rule
+    checks emitted records against (regenerate with ``--write-lock``);
+  * a ``nimble.lint/v1`` JSON report through :mod:`repro.jsonio`.
+
+CLI::
+
+    python -m repro.analysis                 # lint src/repro, exit != 0 on findings
+    python -m repro.analysis --json report.json
+    python -m repro.analysis --write-lock    # regenerate schemas.lock.json
+    python -m repro.analysis --check-lock    # lock freshness (no-op regen?)
+
+Gating: ``python -m repro.api.selfcheck`` check 8 and the
+``static_gate`` in ``benchmarks/run.py --smoke`` both fail closed on any
+non-baselined finding or a stale lock.
+"""
+
+from __future__ import annotations
+
+from .context import FileContext, build_context
+from .engine import (
+    AnalysisEngine,
+    AnalysisReport,
+    Finding,
+    Rule,
+    analyze_paths,
+    analyze_source,
+    default_baseline_path,
+    default_lock_path,
+    load_baseline,
+)
+from .rules import RULES, generate_schema_lock
+from .schemas import lock_is_fresh
+
+__all__ = [
+    "AnalysisEngine",
+    "AnalysisReport",
+    "FileContext",
+    "Finding",
+    "RULES",
+    "Rule",
+    "analyze_paths",
+    "analyze_source",
+    "build_context",
+    "default_baseline_path",
+    "default_lock_path",
+    "generate_schema_lock",
+    "load_baseline",
+    "lock_is_fresh",
+]

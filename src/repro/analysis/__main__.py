@@ -1,0 +1,134 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean, 1 findings (or stale lock under ``--check-lock``),
+2 usage error.  Default target is the ``src/repro`` tree this module
+ships in; paths are reported relative to ``src/`` so baseline entries
+stay machine-independent.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from ..jsonio import json_dumps, write_json_file
+from .engine import (
+    AnalysisEngine,
+    build_contexts,
+    default_baseline_path,
+    default_lock_path,
+    load_baseline,
+    write_baseline,
+)
+from .rules import RULES
+from .schemas import lock_is_fresh, write_lock
+
+
+def _default_root() -> str:
+    # src/repro/analysis/__main__.py -> src/repro
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="NIMBLE static invariant checker (DESIGN.md §12)",
+    )
+    parser.add_argument(
+        "paths", nargs="*", help="files/dirs to lint (default: src/repro)"
+    )
+    parser.add_argument(
+        "--json", metavar="PATH",
+        help="write the nimble.lint/v1 report here ('-' for stdout)",
+    )
+    parser.add_argument(
+        "--baseline", metavar="PATH", default=None,
+        help=f"baseline file (default: {default_baseline_path()})",
+    )
+    parser.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore the baseline — report grandfathered findings too",
+    )
+    parser.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline from this run's findings and exit 0",
+    )
+    parser.add_argument(
+        "--write-lock", action="store_true",
+        help="regenerate schemas.lock.json from the scanned files",
+    )
+    parser.add_argument(
+        "--check-lock", action="store_true",
+        help="also fail when regenerating schemas.lock.json is not a no-op",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    parser.add_argument(
+        "-q", "--quiet", action="store_true", help="summary line only"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.rule_id:20s} {rule.description}")
+        print(f"{'suppression':20s} suppression hygiene (engine built-in)")
+        return 0
+
+    root = _default_root()
+    paths = args.paths or [root]
+    rel_to = os.path.dirname(root)  # .../src — reports say repro/...
+    contexts = build_contexts(paths, rel_to=rel_to)
+
+    if args.write_lock:
+        lock = write_lock(contexts, default_lock_path())
+        print(
+            f"[analysis] wrote {default_lock_path()} "
+            f"({len(lock['kinds'])} kinds)"
+        )
+        return 0
+
+    baseline = (
+        [] if args.no_baseline else load_baseline(args.baseline)
+    )
+    engine = AnalysisEngine(RULES, baseline)
+    report = engine.run(contexts, root=";".join(paths))
+
+    if args.update_baseline:
+        path = args.baseline or default_baseline_path()
+        write_baseline(report.findings, path)
+        print(
+            f"[analysis] baselined {len(report.findings)} finding(s) -> {path}"
+        )
+        return 0
+
+    if not args.quiet:
+        for f in report.findings:
+            print(f)
+    lock_fresh = True
+    if args.check_lock:
+        lock_fresh = lock_is_fresh(default_lock_path(), contexts)
+        if not lock_fresh:
+            print(
+                "[analysis] schemas.lock.json is stale — regenerate with "
+                "--write-lock (and bump versions for changed kinds)"
+            )
+    status = "clean" if report.clean and lock_fresh else "FAIL"
+    print(
+        f"[analysis] {status}: {report.files} files, "
+        f"{len(report.findings)} finding(s), "
+        f"{len(report.suppressed)} suppressed, "
+        f"{len(report.baselined)} baselined"
+    )
+    if args.json:
+        obj = report.to_json_obj()
+        if args.json == "-":
+            sys.stdout.write(json_dumps(obj, indent=True).decode() + "\n")
+        else:
+            write_json_file(args.json, obj)
+    return 0 if report.clean and lock_fresh else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

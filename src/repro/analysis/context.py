@@ -1,0 +1,319 @@
+"""Shared per-file resolution context for the lint rules.
+
+One parse + one resolution pass per file, consumed by every rule:
+
+  * **import/alias resolution** — ``import numpy as np`` makes
+    ``np.random.rand`` resolve to ``numpy.random.rand``; relative
+    imports (``from ..jsonio import tag``) canonicalize against the
+    file's package so ``tag(...)`` resolves to ``repro.jsonio.tag``;
+  * **module-level string constants** — ``TRACE_KIND = "trace"`` lets
+    the schema rule see through ``tag(TRACE_KIND, ...)``;
+  * **dataclass detection** — which classes are ``@dataclasses.dataclass``
+    (and which are ``frozen=True``), their field names/default nodes, so
+    the frozen-spec rule and ``dataclasses.asdict(self)`` key inference
+    work without executing anything;
+  * **jit entry points** — functions decorated ``@jax.jit`` /
+    ``@functools.partial(jax.jit, static_argnums=...)`` (static params
+    resolved to names), plus ``lax.scan`` / ``pallas_call`` body
+    functions and lambdas, so the jit-purity rule knows which bodies are
+    traced;
+  * **parent links** — every node knows its enclosing function/class.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+#: decorator spellings that mark a traced jit entry point
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+#: call targets whose first function argument is a traced body
+_TRACED_CALLS = {"jax.lax.scan": "scan", "lax.scan": "scan"}
+_TRACED_CALL_SUFFIXES = {"pallas_call": "pallas"}
+_DATACLASS_NAMES = {"dataclasses.dataclass", "dataclass"}
+
+
+@dataclasses.dataclass
+class DataclassInfo:
+    """A ``@dataclass`` class found in the file."""
+
+    node: ast.ClassDef
+    frozen: bool
+    # field name -> default expression node (None when no default)
+    fields: Dict[str, Optional[ast.expr]]
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+
+@dataclasses.dataclass
+class JitFunctionInfo:
+    """A function whose body is traced (jit entry point or scan body)."""
+
+    node: ast.AST                  # FunctionDef or Lambda
+    kind: str                      # "jit" | "scan" | "pallas"
+    static_params: Set[str]        # params marked static (never traced)
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+
+class FileContext:
+    """Everything the rules need to know about one parsed file."""
+
+    def __init__(self, path: str, source: str, package: str = ""):
+        self.path = path
+        self.source = source
+        self.package = package
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.aliases = self._collect_imports()
+        self.constants = self._collect_constants()
+        self.dataclasses = self._collect_dataclasses()
+        self.jit_functions = self._collect_jit_functions()
+        self._jit_nodes = {info.node: info for info in self.jit_functions}
+
+    # -- imports ---------------------------------------------------------------
+    def _collect_imports(self) -> Dict[str, str]:
+        aliases: Dict[str, str] = {}
+        pkg_parts = self.package.split(".") if self.package else []
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    # ``import a.b`` binds ``a``; ``import a.b as c`` binds c
+                    if a.asname:
+                        aliases[a.asname] = a.name
+                    else:
+                        root = a.name.split(".")[0]
+                        aliases.setdefault(root, root)
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level:
+                    # relative: resolve against this file's package
+                    base = pkg_parts[: len(pkg_parts) - (node.level - 1)]
+                    mod = ".".join(base + ([mod] if mod else []))
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    bound = a.asname or a.name
+                    aliases[bound] = f"{mod}.{a.name}" if mod else a.name
+        return aliases
+
+    def _collect_constants(self) -> Dict[str, str]:
+        """Module-level ``NAME = "literal"`` string constants."""
+        out: Dict[str, str] = {}
+        for node in self.tree.body:
+            if (
+                isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, str)
+            ):
+                out[node.targets[0].id] = node.value.value
+        return out
+
+    # -- name resolution -------------------------------------------------------
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name for a Name/Attribute chain (else None).
+
+        ``np.random.rand`` -> ``numpy.random.rand`` given
+        ``import numpy as np``; bare builtins resolve to themselves.
+        """
+        parts: List[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        root = self.aliases.get(cur.id, cur.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+    def string_value(self, node: ast.AST) -> Optional[str]:
+        """Constant string value of a node, seeing through module constants."""
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value
+        if isinstance(node, ast.Name):
+            return self.constants.get(node.id)
+        return None
+
+    # -- dataclasses -----------------------------------------------------------
+    def _collect_dataclasses(self) -> Dict[str, DataclassInfo]:
+        out: Dict[str, DataclassInfo] = {}
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            frozen = None
+            for dec in node.decorator_list:
+                target, kws = self._decorator_call(dec)
+                if target in _DATACLASS_NAMES:
+                    frozen = any(
+                        kw.arg == "frozen"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True
+                        for kw in kws
+                    )
+            if frozen is None:
+                continue
+            fields: Dict[str, Optional[ast.expr]] = {}
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and isinstance(
+                    stmt.target, ast.Name
+                ):
+                    if isinstance(stmt.annotation, ast.Name) and (
+                        stmt.annotation.id == "ClassVar"
+                    ):
+                        continue
+                    fields[stmt.target.id] = stmt.value
+            out[node.name] = DataclassInfo(node, frozen, fields)
+        return out
+
+    def _decorator_call(
+        self, dec: ast.AST
+    ) -> Tuple[Optional[str], List[ast.keyword]]:
+        """(resolved target, keywords) of a decorator, Call or bare."""
+        if isinstance(dec, ast.Call):
+            return self.resolve(dec.func), dec.keywords
+        return self.resolve(dec), []
+
+    # -- jit entry points ------------------------------------------------------
+    def _collect_jit_functions(self) -> List[JitFunctionInfo]:
+        out: List[JitFunctionInfo] = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = self._jit_decorated(node)
+                if info is not None:
+                    out.append(info)
+            elif isinstance(node, ast.Call):
+                out.extend(self._traced_call_bodies(node))
+        # dedupe: a scan body that is also @jit-decorated keeps the jit entry
+        seen: Set[ast.AST] = set()
+        unique: List[JitFunctionInfo] = []
+        for info in out:
+            if info.node not in seen:
+                seen.add(info.node)
+                unique.append(info)
+        return unique
+
+    def _jit_decorated(
+        self, node: ast.FunctionDef
+    ) -> Optional[JitFunctionInfo]:
+        for dec in node.decorator_list:
+            if self.resolve(dec) in _JIT_NAMES:
+                return JitFunctionInfo(node, "jit", set())
+            if isinstance(dec, ast.Call):
+                target = self.resolve(dec.func)
+                if target in _JIT_NAMES:
+                    return JitFunctionInfo(
+                        node, "jit", self._static_params(node, dec.keywords)
+                    )
+                if (
+                    target in _PARTIAL_NAMES
+                    and dec.args
+                    and self.resolve(dec.args[0]) in _JIT_NAMES
+                ):
+                    return JitFunctionInfo(
+                        node, "jit", self._static_params(node, dec.keywords)
+                    )
+        return None
+
+    def _static_params(
+        self, node: ast.FunctionDef, keywords: List[ast.keyword]
+    ) -> Set[str]:
+        """Param names marked static via static_argnums/static_argnames."""
+        params = [a.arg for a in node.args.posonlyargs + node.args.args]
+        static: Set[str] = set()
+        for kw in keywords:
+            names = _constant_leaves(kw.value)
+            if kw.arg == "static_argnums":
+                for v in names:
+                    if isinstance(v, int) and 0 <= v < len(params):
+                        static.add(params[v])
+            elif kw.arg == "static_argnames":
+                for v in names:
+                    if isinstance(v, str):
+                        static.add(v)
+        return static
+
+    def _traced_call_bodies(self, call: ast.Call) -> List[JitFunctionInfo]:
+        """Bodies handed to lax.scan / pallas_call (traced, all-dynamic)."""
+        target = self.resolve(call.func)
+        kind = None
+        if target in _TRACED_CALLS:
+            kind = _TRACED_CALLS[target]
+        elif target:
+            for suffix, k in _TRACED_CALL_SUFFIXES.items():
+                if target.endswith(suffix):
+                    kind = k
+        if kind is None or not call.args:
+            return []
+        body = call.args[0]
+        if isinstance(body, ast.Lambda):
+            return [JitFunctionInfo(body, kind, set())]
+        if isinstance(body, ast.Name):
+            # nearest enclosing def of that name: walk up from the call
+            scope: Optional[ast.AST] = call
+            while scope is not None:
+                for node in ast.walk(scope):
+                    if (
+                        isinstance(node, ast.FunctionDef)
+                        and node.name == body.id
+                    ):
+                        return [JitFunctionInfo(node, kind, set())]
+                scope = self.parents.get(scope)
+        return []
+
+    # -- lexical queries -------------------------------------------------------
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_jit(self, node: ast.AST) -> Optional[JitFunctionInfo]:
+        """The innermost traced body ``node`` sits in, if any."""
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            info = self._jit_nodes.get(cur)
+            if info is not None:
+                return info
+            cur = self.parents.get(cur)
+        return None
+
+
+def _constant_leaves(node: ast.AST) -> List[object]:
+    """Constant scalars inside a (possibly nested) literal expression."""
+    if isinstance(node, ast.Constant):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: List[object] = []
+        for elt in node.elts:
+            out.extend(_constant_leaves(elt))
+        return out
+    return []
+
+
+def build_context(path: str, source: str, package: str = "") -> FileContext:
+    """Parse ``source`` into a :class:`FileContext` (rules' entry point)."""
+    return FileContext(path, source, package)

@@ -1,0 +1,327 @@
+"""Lint engine: file discovery, suppressions, baseline, report.
+
+The engine owns everything that is not rule logic:
+
+  * walking roots for ``.py`` files and building one
+    :class:`~repro.analysis.context.FileContext` per file;
+  * inline suppressions — ``# nimble: ignore[<rule-id>] -- reason`` on
+    the flagged line or the comment line directly above it.  The reason is
+    mandatory: a suppression without one (or naming an unknown rule, or
+    suppressing nothing) is itself a finding (rule id ``suppression``),
+    so every grandfathered violation carries a written justification;
+  * the committed baseline (``baseline.json``): findings matching a
+    baseline entry by ``(rule, path, message)`` — line numbers churn —
+    are reported as *baselined*, not failures.  The ``src/`` baseline
+    ships empty and should stay that way;
+  * the ``nimble.lint/v1`` report through :mod:`repro.jsonio`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+from ..jsonio import read_json_file, tag, write_json_file
+from .context import FileContext, build_context
+
+#: inline suppression: ``# nimble: ignore[<rule-a>,<rule-b>] -- why``
+SUPPRESS_RE = re.compile(
+    r"#\s*nimble:\s*ignore\[(?P<rules>[a-z0-9_,\s-]*)\]"
+    r"(?:\s*--\s*(?P<reason>.*\S))?\s*$"
+)
+
+LINT_KIND = "lint"
+BASELINE_KIND = "lint_baseline"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity — line/col churn must not invalidate entries."""
+        return (self.rule, self.path, self.message)
+
+    def to_json_obj(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+        }
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+class Rule(Protocol):
+    """A lint rule: stateless check over one resolved file context."""
+
+    rule_id: str
+    description: str
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        """Yield findings for ``ctx`` (relative paths, 1-based lines)."""
+        ...
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int              # line the comment sits on (1-based)
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+
+def parse_suppressions(source: str) -> List[Suppression]:
+    out: List[Suppression] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(
+            r.strip() for r in m.group("rules").split(",") if r.strip()
+        )
+        out.append(Suppression(i, rules, (m.group("reason") or "").strip()))
+    return out
+
+
+def _comment_only(line_text: str) -> bool:
+    stripped = line_text.strip()
+    return stripped.startswith("#")
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """Aggregate result of one engine run."""
+
+    root: str
+    files: int
+    findings: List[Finding]              # live (not suppressed/baselined)
+    suppressed: List[Finding]
+    baselined: List[Finding]
+    counts: Dict[str, int]
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+    def to_json_obj(self) -> dict:
+        return tag(LINT_KIND, {
+            "root": self.root,
+            "files": self.files,
+            "clean": self.clean,
+            "counts": {k: self.counts[k] for k in sorted(self.counts)},
+            "findings": [f.to_json_obj() for f in self.findings],
+            "suppressed": len(self.suppressed),
+            "baselined": len(self.baselined),
+        })
+
+
+def default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def default_lock_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "schemas.lock.json")
+
+
+def load_baseline(path: Optional[str] = None) -> List[Tuple[str, str, str]]:
+    """Baseline entries as ``(rule, path, message)`` keys (missing file =
+    empty baseline)."""
+    path = path or default_baseline_path()
+    if not os.path.exists(path):
+        return []
+    obj = read_json_file(path)
+    entries = obj.get("entries", [])
+    return [(e["rule"], e["path"], e["message"]) for e in entries]
+
+
+def write_baseline(findings: Sequence[Finding], path: str) -> None:
+    """Write ``findings`` as a fresh baseline (``--update-baseline``)."""
+    write_json_file(path, tag(BASELINE_KIND, {
+        "entries": [
+            {"rule": f.rule, "path": f.path, "message": f.message}
+            for f in sorted(findings, key=lambda f: f.key())
+        ],
+    }))
+
+
+class AnalysisEngine:
+    """Run a rule set over a file set and classify the findings."""
+
+    def __init__(
+        self,
+        rules: Sequence[Rule],
+        baseline: Optional[Sequence[Tuple[str, str, str]]] = None,
+    ):
+        self.rules = list(rules)
+        self.rule_ids = {r.rule_id for r in self.rules} | {"suppression"}
+        self.baseline = set(baseline or [])
+
+    # -- per-file --------------------------------------------------------------
+    def check_file(self, ctx: FileContext) -> List[Finding]:
+        """All raw findings for one file, suppression hygiene included."""
+        findings: List[Finding] = []
+        for rule in self.rules:
+            findings.extend(rule.check(ctx))
+        suppressions = parse_suppressions(ctx.source)
+        live = self._apply_suppressions(ctx, findings, suppressions)
+        live.extend(self._suppression_hygiene(ctx, suppressions))
+        return live
+
+    def _apply_suppressions(
+        self,
+        ctx: FileContext,
+        findings: List[Finding],
+        suppressions: List[Suppression],
+    ) -> List[Finding]:
+        by_line: Dict[int, Suppression] = {s.line: s for s in suppressions}
+        live: List[Finding] = []
+        for f in findings:
+            sup = by_line.get(f.line)
+            if sup is None:
+                above = by_line.get(f.line - 1)
+                if above is not None and _comment_only(
+                    ctx.lines[above.line - 1]
+                ):
+                    sup = above
+            if sup is not None and f.rule in sup.rules and sup.reason:
+                sup.used = True
+                live.append(dataclasses.replace(f, rule=f"~{f.rule}"))
+            else:
+                live.append(f)
+        return live
+
+    def _suppression_hygiene(
+        self, ctx: FileContext, suppressions: List[Suppression]
+    ) -> List[Finding]:
+        out: List[Finding] = []
+        for s in suppressions:
+            if not s.rules:
+                out.append(Finding(
+                    "suppression", ctx.path, s.line, 0,
+                    "suppression names no rule id — use "
+                    "`# nimble: ignore[<rule-id>] -- reason`",
+                ))
+                continue
+            unknown = [r for r in s.rules if r not in self.rule_ids]
+            if unknown:
+                out.append(Finding(
+                    "suppression", ctx.path, s.line, 0,
+                    f"suppression names unknown rule(s) {unknown}",
+                ))
+            if not s.reason:
+                out.append(Finding(
+                    "suppression", ctx.path, s.line, 0,
+                    f"suppression of {list(s.rules)} has no written "
+                    "justification (append `-- reason`)",
+                ))
+            elif not s.used and not unknown:
+                out.append(Finding(
+                    "suppression", ctx.path, s.line, 0,
+                    f"suppression of {list(s.rules)} matches no finding — "
+                    "stale, remove it",
+                ))
+        return out
+
+    # -- aggregate -------------------------------------------------------------
+    def run(self, contexts: Iterable[FileContext], root: str = "") -> AnalysisReport:
+        live: List[Finding] = []
+        suppressed: List[Finding] = []
+        baselined: List[Finding] = []
+        files = 0
+        for ctx in contexts:
+            files += 1
+            for f in self.check_file(ctx):
+                if f.rule.startswith("~"):
+                    suppressed.append(
+                        dataclasses.replace(f, rule=f.rule[1:])
+                    )
+                elif f.key() in self.baseline:
+                    baselined.append(f)
+                else:
+                    live.append(f)
+        live.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+        counts: Dict[str, int] = {}
+        for f in live:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        return AnalysisReport(root, files, live, suppressed, baselined, counts)
+
+
+# -- discovery ------------------------------------------------------------------
+
+def iter_python_files(root: str) -> Iterable[str]:
+    if os.path.isfile(root):
+        yield root
+        return
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(
+            d for d in dirnames if d != "__pycache__" and not d.startswith(".")
+        )
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def _package_of(path: str) -> str:
+    """Dotted package for a file path (``.../src/repro/x/y.py`` ->
+    ``repro.x``); empty when no ``repro`` anchor is present."""
+    parts = os.path.normpath(os.path.abspath(path)).split(os.sep)
+    if "repro" not in parts:
+        return ""
+    pkg = parts[parts.index("repro"):-1]
+    return ".".join(pkg)
+
+
+def build_contexts(
+    paths: Sequence[str], rel_to: Optional[str] = None
+) -> List[FileContext]:
+    contexts: List[FileContext] = []
+    for root in paths:
+        for path in iter_python_files(root):
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            rel = os.path.relpath(path, rel_to) if rel_to else path
+            contexts.append(build_context(rel, source, _package_of(path)))
+    return contexts
+
+
+def analyze_paths(
+    paths: Sequence[str],
+    rules: Optional[Sequence[Rule]] = None,
+    baseline: Optional[Sequence[Tuple[str, str, str]]] = None,
+    rel_to: Optional[str] = None,
+) -> AnalysisReport:
+    """Lint ``paths`` with ``rules`` (default: the full registry)."""
+    if rules is None:
+        from .rules import RULES
+
+        rules = RULES
+    engine = AnalysisEngine(rules, baseline)
+    contexts = build_contexts(paths, rel_to=rel_to)
+    return engine.run(contexts, root=";".join(paths))
+
+
+def analyze_source(
+    source: str,
+    path: str = "<fixture>.py",
+    rules: Optional[Sequence[Rule]] = None,
+    package: str = "",
+) -> AnalysisReport:
+    """Lint one in-memory source blob (the test-fixture entry point)."""
+    if rules is None:
+        from .rules import RULES
+
+        rules = RULES
+    engine = AnalysisEngine(rules)
+    return engine.run([build_context(path, source, package)], root=path)

@@ -1,0 +1,590 @@
+"""The NIMBLE rule catalog (DESIGN.md §12).
+
+Five rules, each grounded in a convention the repo already states in
+prose or pins with runtime tests:
+
+  * ``jit-purity`` — retrace/impurity hazards inside traced bodies
+    (``@jax.jit`` entry points, ``lax.scan`` / ``pallas_call`` bodies):
+    host pulls (``.item()`` / ``.tolist()`` / ``float()`` on traced
+    values), Python branching on traced parameters, trace-time side
+    effects (``print``, wall-clock, RNG), closures that mutate state,
+    and unhashable ``static_argnums`` / ``static_argnames`` specs;
+  * ``determinism`` — wall-clock, unseeded RNG, and order-sensitive
+    ``set`` iteration in the seed-deterministic layers (``core/``,
+    ``fabric/``, ``faults/``, ``serve/scenario.py``) whose digests,
+    arbitration order, and schedules must be bit-stable;
+  * ``schema-discipline`` — every ``nimble.<kind>/vN`` literal and
+    ``tag()`` call must strict-parse, use a kind registered in
+    ``repro.jsonio.KNOWN_SCHEMAS`` at the registered version, and emit
+    only keys recorded in ``schemas.lock.json`` (new keys require a
+    version bump + lock regeneration);
+  * ``frozen-spec`` — ``object.__setattr__`` outside a frozen
+    dataclass's ``__post_init__``, and mutable defaults on frozen spec
+    fields;
+  * ``float-eq`` — ``==`` / ``!=`` against NaN anywhere (always False —
+    NaN is a *sentinel* in telemetry/estimator paths, probed with
+    ``isnan``), and float-literal equality in those paths.
+
+Rules are stateless over a :class:`~repro.analysis.context.FileContext`;
+scoping is by path prefix so test fixtures opt in by naming their
+virtual path accordingly.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+from ..jsonio import known_schemas
+from .context import FileContext, JitFunctionInfo
+from .engine import Finding
+from .schemas import collect_schema_sites, generate_lock_obj, load_lock
+
+
+def _norm(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+def _in_scope(path: str, prefixes: Sequence[str]) -> bool:
+    p = _norm(path)
+    return any(f"/{frag}" in f"/{p}" for frag in prefixes)
+
+
+# -- rule 1: jit-purity ----------------------------------------------------------
+
+#: impure calls that capture trace-time state (baked into the jaxpr once)
+_IMPURE_IN_JIT = {
+    "time.time", "time.time_ns", "time.monotonic", "time.perf_counter",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "os.urandom", "uuid.uuid4", "print",
+}
+_HOST_PULL_ATTRS = {"item", "tolist"}
+_HOST_CASTS = {"float", "int", "bool"}
+#: attribute accesses that stay static under trace (shape metadata)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_MUTATING_METHODS = {
+    "append", "extend", "insert", "add", "update", "pop", "remove",
+    "clear", "setdefault", "popitem", "discard",
+}
+
+
+class JitPurityRule:
+    rule_id = "jit-purity"
+    description = (
+        "retrace/impurity hazards inside jit, lax.scan, and pallas bodies"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for info in ctx.jit_functions:
+            yield from self._check_body(ctx, info)
+        # static-spec hygiene lives on the decorators, outside the body
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_static_spec(ctx, node)
+
+    # each traced body: walk it once, skipping nested traced bodies that
+    # will be visited on their own (they are still traced content, so the
+    # same checks apply — visiting them from their own info is enough)
+    def _check_body(
+        self, ctx: FileContext, info: JitFunctionInfo
+    ) -> Iterator[Finding]:
+        params = self._params(info.node)
+        traced = params - info.static_params
+        for node in ast.walk(info.node):
+            if ctx.enclosing_jit(node) is not info and node is not info.node:
+                continue  # belongs to a nested traced body
+            if isinstance(node, ast.Call):
+                yield from self._check_call(ctx, info, node)
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                yield Finding(
+                    self.rule_id, ctx.path, node.lineno, node.col_offset,
+                    f"`{'global' if isinstance(node, ast.Global) else 'nonlocal'}"
+                    f" {', '.join(node.names)}` inside traced body "
+                    f"`{info.name}` — jit closures must not mutate "
+                    "enclosing state (runs at trace time only)",
+                )
+            elif isinstance(node, (ast.If, ast.While)):
+                yield from self._check_branch(ctx, info, node, traced)
+
+    def _params(self, node: ast.AST) -> Set[str]:
+        args = getattr(node, "args", None)
+        if args is None:
+            return set()
+        names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        return set(names)
+
+    def _check_call(
+        self, ctx: FileContext, info: JitFunctionInfo, call: ast.Call
+    ) -> Iterator[Finding]:
+        target = ctx.resolve(call.func)
+        if target in _IMPURE_IN_JIT or (
+            target
+            and (target.startswith("random.")
+                 or (target.startswith("numpy.random.")
+                     and target != "numpy.random.default_rng"))
+        ):
+            yield Finding(
+                self.rule_id, ctx.path, call.lineno, call.col_offset,
+                f"`{target}` inside traced body `{info.name}` — executes "
+                "at trace time only and bakes its value into the jaxpr",
+            )
+            return
+        if isinstance(call.func, ast.Attribute) and (
+            call.func.attr in _HOST_PULL_ATTRS and not call.args
+        ):
+            base = ctx.resolve(call.func.value)
+            if not self._static_expr(ctx, info, call.func.value):
+                yield Finding(
+                    self.rule_id, ctx.path, call.lineno, call.col_offset,
+                    f"`.{call.func.attr}()` on "
+                    f"{'`' + base + '`' if base else 'a traced value'} "
+                    f"inside traced body `{info.name}` — host pull forces "
+                    "a sync (ConcretizationTypeError under jit)",
+                )
+            return
+        if (
+            target in _HOST_CASTS
+            and len(call.args) == 1
+            and not isinstance(call.args[0], ast.Constant)
+            and not self._static_expr(ctx, info, call.args[0])
+        ):
+            yield Finding(
+                self.rule_id, ctx.path, call.lineno, call.col_offset,
+                f"`{target}()` on a traced value inside `{info.name}` — "
+                "concretizes the tracer (retrace hazard); keep it a jnp "
+                "array or hoist to the host side",
+            )
+            return
+        # in-place mutation of closed-over (non-local) state
+        if isinstance(call.func, ast.Attribute) and (
+            call.func.attr in _MUTATING_METHODS
+            and isinstance(call.func.value, ast.Name)
+        ):
+            name = call.func.value.id
+            if name not in self._local_bindings(info):
+                yield Finding(
+                    self.rule_id, ctx.path, call.lineno, call.col_offset,
+                    f"`{name}.{call.func.attr}(...)` inside traced body "
+                    f"`{info.name}` mutates closed-over state — trace-time "
+                    "side effect, silently stale on cache hits",
+                )
+
+    def _local_bindings(self, info: JitFunctionInfo) -> Set[str]:
+        cached = getattr(info, "locals_cache", None)
+        if cached is not None:
+            return cached
+        names = set(self._params(info.node))
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Name) and isinstance(
+                node.ctx, ast.Store
+            ):
+                names.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node is not info.node:
+                    names.add(node.name)
+        info.locals_cache = names
+        return names
+
+    def _static_expr(
+        self, ctx: FileContext, info: JitFunctionInfo, node: ast.AST
+    ) -> bool:
+        """Conservatively true when ``node`` only touches static material:
+        shape/dtype metadata, static params, or plain constants."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+                return True
+        names = {
+            n.id for n in ast.walk(node) if isinstance(n, ast.Name)
+        }
+        params = self._params(info.node)
+        dynamic = (names & params) - info.static_params
+        return not dynamic and not (names - params)
+
+    def _check_branch(
+        self,
+        ctx: FileContext,
+        info: JitFunctionInfo,
+        node: ast.AST,
+        traced: Set[str],
+    ) -> Iterator[Finding]:
+        test = node.test
+        # `x is None` branches on pytree *structure*, not a traced value
+        if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+        ):
+            return
+        if any(
+            isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS
+            for sub in ast.walk(test)
+        ):
+            return
+        hit = sorted(
+            n.id for n in ast.walk(test)
+            if isinstance(n, ast.Name) and n.id in traced
+        )
+        if hit:
+            kw = "if" if isinstance(node, ast.If) else "while"
+            yield Finding(
+                self.rule_id, ctx.path, node.lineno, node.col_offset,
+                f"Python `{kw}` on traced parameter(s) {hit} inside "
+                f"`{info.name}` — branches at trace time "
+                "(TracerBoolConversionError / silent retrace); use "
+                "lax.cond/jnp.where or mark the argument static",
+            )
+
+    def _check_static_spec(
+        self, ctx: FileContext, node: ast.FunctionDef
+    ) -> Iterator[Finding]:
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            target = ctx.resolve(dec.func)
+            is_jit = target in ("jax.jit", "jit") or (
+                target in ("functools.partial", "partial")
+                and dec.args
+                and ctx.resolve(dec.args[0]) in ("jax.jit", "jit")
+            )
+            if not is_jit:
+                continue
+            for kw in dec.keywords:
+                if kw.arg not in ("static_argnums", "static_argnames"):
+                    continue
+                if not self._hashable_literal(kw.value):
+                    yield Finding(
+                        self.rule_id, ctx.path, kw.value.lineno,
+                        kw.value.col_offset,
+                        f"`{kw.arg}` on `{node.name}` is not a hashable "
+                        "constant literal (int/str or tuple thereof) — "
+                        "lists/dynamic specs break the jit cache key",
+                    )
+
+    def _hashable_literal(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, (int, str))
+        if isinstance(node, ast.Tuple):
+            return all(self._hashable_literal(e) for e in node.elts)
+        return False
+
+
+# -- rule 2: determinism ---------------------------------------------------------
+
+#: layers whose outputs must be seed/ordering-deterministic
+_DETERMINISM_SCOPE = (
+    "repro/core/", "repro/fabric/", "repro/faults/",
+    "repro/serve/scenario.py",
+)
+_WALLCLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+_ENTROPY = {
+    "os.urandom", "uuid.uuid1", "uuid.uuid4",
+    "secrets.token_bytes", "secrets.token_hex", "secrets.randbits",
+    "secrets.choice",
+}
+_NP_RANDOM_ALLOWED = {
+    "numpy.random.default_rng", "numpy.random.Generator",
+    "numpy.random.SeedSequence",
+}
+#: iteration-order-sensitive consumers of a set-producing expression
+_ORDER_SENSITIVE_CALLS = {"list", "tuple", "enumerate"}
+
+
+class DeterminismRule:
+    rule_id = "determinism"
+    description = (
+        "wall-clock, unseeded RNG, and set-iteration in deterministic layers"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not _in_scope(ctx.path, _DETERMINISM_SCOPE):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(ctx, node)
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                if self._set_producing(ctx, it):
+                    yield Finding(
+                        self.rule_id, ctx.path, it.lineno, it.col_offset,
+                        "iteration over a set — order is hash-dependent; "
+                        "wrap in sorted(...) to keep digests/arbitration "
+                        "order bit-stable",
+                    )
+
+    def _check_call(self, ctx: FileContext, call: ast.Call) -> Iterator[Finding]:
+        target = ctx.resolve(call.func)
+        if target in _WALLCLOCK:
+            yield Finding(
+                self.rule_id, ctx.path, call.lineno, call.col_offset,
+                f"`{target}` in a deterministic layer — wall-clock breaks "
+                "replayability; thread a window/clock value in instead",
+            )
+        elif target in _ENTROPY:
+            yield Finding(
+                self.rule_id, ctx.path, call.lineno, call.col_offset,
+                f"`{target}` in a deterministic layer — unseeded entropy; "
+                "derive from the scenario seed",
+            )
+        elif target and target.startswith("random."):
+            yield Finding(
+                self.rule_id, ctx.path, call.lineno, call.col_offset,
+                f"`{target}` uses the process-global RNG — use a seeded "
+                "`random.Random(seed)` / `np.random.default_rng(seed)`",
+            )
+        elif (
+            target
+            and target.startswith("numpy.random.")
+            and target not in _NP_RANDOM_ALLOWED
+        ):
+            yield Finding(
+                self.rule_id, ctx.path, call.lineno, call.col_offset,
+                f"`{target}` uses numpy's global RNG — use a seeded "
+                "`np.random.default_rng(seed)` generator",
+            )
+        elif (
+            target in _ORDER_SENSITIVE_CALLS
+            and call.args
+            and self._set_producing(ctx, call.args[0])
+        ):
+            yield Finding(
+                self.rule_id, ctx.path, call.lineno, call.col_offset,
+                f"`{target}(<set>)` materializes hash order — use "
+                "sorted(...) for a deterministic sequence",
+            )
+
+    def _set_producing(self, ctx: FileContext, node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            if ctx.resolve(node.func) in ("set", "frozenset"):
+                return True
+            # set.union/intersection/difference chains keep set order
+            if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                "union", "intersection", "difference",
+                "symmetric_difference",
+            ):
+                return self._set_producing(ctx, node.func.value)
+        if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+        ):
+            return self._set_producing(ctx, node.left) or self._set_producing(
+                ctx, node.right
+            )
+        return False
+
+
+# -- rule 3: schema-discipline ---------------------------------------------------
+
+class SchemaDisciplineRule:
+    rule_id = "schema-discipline"
+    description = (
+        "frozen nimble.<kind>/vN ids: strict parse, registry, lock manifest"
+    )
+
+    def __init__(self, lock: Optional[dict] = None):
+        # default: the committed lock, loaded lazily so fixture runs can
+        # inject their own manifest
+        self._lock = lock
+        self._lock_loaded = lock is not None
+
+    @property
+    def lock(self) -> Optional[dict]:
+        if not self._lock_loaded:
+            from .engine import default_lock_path
+
+            self._lock = load_lock(default_lock_path())
+            self._lock_loaded = True
+        return self._lock
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        registry = known_schemas()
+        lock_kinds = (self.lock or {}).get("kinds", {})
+        for site in collect_schema_sites(ctx):
+            if site.error is not None:
+                yield Finding(
+                    self.rule_id, ctx.path, site.line, site.col,
+                    f"malformed schema reference {site.raw!r}: {site.error}",
+                )
+                continue
+            assert site.kind is not None and site.version is not None
+            if site.kind not in registry:
+                yield Finding(
+                    self.rule_id, ctx.path, site.line, site.col,
+                    f"schema kind {site.kind!r} is not registered in "
+                    "repro.jsonio.KNOWN_SCHEMAS",
+                )
+                continue
+            if site.version != registry[site.kind]:
+                yield Finding(
+                    self.rule_id, ctx.path, site.line, site.col,
+                    f"{site.raw} pins v{site.version} but "
+                    f"{site.kind!r} is registered at "
+                    f"v{registry[site.kind]} — stale reference or missing "
+                    "registry bump",
+                )
+                continue
+            if site.source != "tag" or site.keys is None:
+                continue
+            locked = lock_kinds.get(site.kind)
+            if locked is None:
+                yield Finding(
+                    self.rule_id, ctx.path, site.line, site.col,
+                    f"kind {site.kind!r} is emitted here but absent from "
+                    "schemas.lock.json — regenerate with "
+                    "`python -m repro.analysis --write-lock`",
+                )
+                continue
+            if locked.get("version") != site.version:
+                yield Finding(
+                    self.rule_id, ctx.path, site.line, site.col,
+                    f"{site.raw} emits v{site.version} but the lock "
+                    f"records v{locked.get('version')} — bump the registry "
+                    "and regenerate the lock",
+                )
+                continue
+            locked_keys = locked.get("keys")
+            if locked_keys is None:
+                continue
+            extra = sorted(site.keys - set(locked_keys))
+            if extra:
+                yield Finding(
+                    self.rule_id, ctx.path, site.line, site.col,
+                    f"{site.raw} emits key(s) {extra} not in "
+                    "schemas.lock.json — emitted keys changed: bump the "
+                    "schema version and regenerate the lock",
+                )
+
+
+# -- rule 4: frozen-spec ---------------------------------------------------------
+
+_MUTABLE_DEFAULT_CALLS = {
+    "list", "dict", "set", "bytearray",
+    "numpy.array", "numpy.zeros", "numpy.ones", "numpy.empty",
+    "numpy.full", "numpy.arange",
+}
+
+
+class FrozenSpecRule:
+    rule_id = "frozen-spec"
+    description = (
+        "object.__setattr__ outside __post_init__; mutable frozen defaults"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for info in ctx.dataclasses.values():
+            if not info.frozen:
+                continue
+            for name, default in info.fields.items():
+                if default is not None and self._mutable_default(ctx, default):
+                    yield Finding(
+                        self.rule_id, ctx.path, default.lineno,
+                        default.col_offset,
+                        f"frozen spec `{info.name}.{name}` has a mutable "
+                        "default — shared across every instance; use "
+                        "dataclasses.field(default_factory=...) or an "
+                        "immutable value",
+                    )
+        for node in ast.walk(ctx.tree):
+            if not (
+                isinstance(node, ast.Call)
+                and ctx.resolve(node.func) == "object.__setattr__"
+            ):
+                continue
+            fn = ctx.enclosing_function(node)
+            cls = ctx.enclosing_class(node)
+            in_post_init = (
+                fn is not None
+                and getattr(fn, "name", "") == "__post_init__"
+                and cls is not None
+                and cls.name in ctx.dataclasses
+                and ctx.dataclasses[cls.name].frozen
+            )
+            if not in_post_init:
+                yield Finding(
+                    self.rule_id, ctx.path, node.lineno, node.col_offset,
+                    "object.__setattr__ outside a frozen dataclass's "
+                    "__post_init__ — defeats the frozen-spec contract "
+                    "(hash/eq stability, safe sharing across sessions)",
+                )
+
+    def _mutable_default(self, ctx: FileContext, node: ast.expr) -> bool:
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            return ctx.resolve(node.func) in _MUTABLE_DEFAULT_CALLS
+        return False
+
+
+# -- rule 5: float-eq ------------------------------------------------------------
+
+#: files where NaN is a live sentinel and float equality is a trap
+_FLOAT_EQ_SCOPE = (
+    "repro/runtime/telemetry.py", "repro/runtime/estimator.py",
+)
+_NAN_NAMES = {"numpy.nan", "numpy.NaN", "math.nan", "jax.numpy.nan"}
+
+
+class FloatEqRule:
+    rule_id = "float-eq"
+    description = "== / != against NaN or float literals in sentinel paths"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        scoped = _in_scope(ctx.path, _FLOAT_EQ_SCOPE)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            if not any(isinstance(op, (ast.Eq, ast.NotEq)) for op in node.ops):
+                continue
+            operands = [node.left, *node.comparators]
+            if any(self._is_nan(ctx, o) for o in operands):
+                yield Finding(
+                    self.rule_id, ctx.path, node.lineno, node.col_offset,
+                    "comparison against NaN is always False — NaN is a "
+                    "telemetry sentinel; probe with np.isnan/math.isnan",
+                )
+            elif scoped and any(
+                isinstance(o, ast.Constant) and isinstance(o.value, float)
+                for o in operands
+            ):
+                yield Finding(
+                    self.rule_id, ctx.path, node.lineno, node.col_offset,
+                    "float-literal equality in a NaN-sentinel path — "
+                    "rounding/telemetry noise makes exact equality flaky; "
+                    "compare with a tolerance or an integer state",
+                )
+
+    def _is_nan(self, ctx: FileContext, node: ast.AST) -> bool:
+        if ctx.resolve(node) in _NAN_NAMES:
+            return True
+        return (
+            isinstance(node, ast.Call)
+            and ctx.resolve(node.func) == "float"
+            and len(node.args) == 1
+            and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, str)
+            and node.args[0].value.lower() == "nan"
+        )
+
+
+# -- registry --------------------------------------------------------------------
+
+RULES = (
+    JitPurityRule(),
+    DeterminismRule(),
+    SchemaDisciplineRule(),
+    FrozenSpecRule(),
+    FloatEqRule(),
+)
+
+
+def generate_schema_lock(contexts: Iterable[FileContext]) -> dict:
+    """Public alias for the lock generator (CLI + bench gate)."""
+    return generate_lock_obj(contexts)

@@ -25,9 +25,15 @@ this environment:
      ``minimal`` scenario rerun with tracing attached exports a valid
      ``nimble.trace/v1`` Chrome trace spanning all four layers under one
      correlation id, every swap has a provenance record, and the serve
-     report embeds a ``nimble.metrics/v1`` snapshot.
+     report embeds a ``nimble.metrics/v1`` snapshot;
+  8. **lint**       — the static invariant checker (ISSUE 9, DESIGN.md
+     §12): the full ``repro.analysis`` rule registry reports zero live
+     findings over ``src/repro`` with the shipped (empty) baseline, the
+     ``nimble.lint/v1`` report strict-parses, and ``schemas.lock.json``
+     is fresh (regenerating it from source is a no-op).
 
-``benchmarks/run.py --smoke`` reuses check 3 as its ``session_api`` gate.
+``benchmarks/run.py --smoke`` reuses check 3 as its ``session_api`` gate
+and check 8 as its ``static_gate``.
 """
 
 from __future__ import annotations
@@ -333,6 +339,51 @@ def check_obs() -> str:
     )
 
 
+def check_lint() -> str:
+    """Static invariant checker over src/repro: zero live findings with
+    the shipped baseline, a strict-parsing ``nimble.lint/v1`` report, and
+    a fresh ``schemas.lock.json`` (ISSUE 9, DESIGN.md §12)."""
+    import os
+
+    from ..analysis import (
+        analyze_paths,
+        default_baseline_path,
+        default_lock_path,
+        load_baseline,
+        lock_is_fresh,
+    )
+    from ..analysis.engine import build_contexts
+    from ..jsonio import parse_schema_id
+
+    src_repro = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rel_to = os.path.dirname(src_repro)
+    report = analyze_paths(
+        [src_repro],
+        baseline=load_baseline(default_baseline_path()),
+        rel_to=rel_to,
+    )
+    if not report.clean:
+        head = "; ".join(str(f) for f in report.findings[:3])
+        raise AssertionError(
+            f"{len(report.findings)} live finding(s) over src/repro "
+            f"(first: {head}) — run `python -m repro.analysis`"
+        )
+    obj = report.to_json_obj()
+    if parse_schema_id(obj["schema"]) != ("lint", 1):
+        raise AssertionError(f"lint report schema {obj['schema']!r}")
+    contexts = build_contexts([src_repro], rel_to=rel_to)
+    if not lock_is_fresh(default_lock_path(), contexts):
+        raise AssertionError(
+            "schemas.lock.json is stale — "
+            "`python -m repro.analysis --write-lock` and commit"
+        )
+    return (
+        f"lint: {report.files} files clean "
+        f"({len(report.suppressed)} suppressed, "
+        f"{len(report.baselined)} baselined); schema lock fresh"
+    )
+
+
 def smoke_session_check() -> dict:
     """The ``benchmarks/run.py --smoke`` gate: arbitrated two-tenant window
     through the facade + schema validation.  Returns a summary record."""
@@ -356,6 +407,7 @@ def main(argv=None) -> int:
         check_price_decay,
         check_serve,
         check_obs,
+        check_lint,
     ]
     failed = 0
     for check in checks:

@@ -35,7 +35,102 @@ except ImportError:  # stdlib fallback — same on-disk format, just slower
 
 # -- shared record schema -------------------------------------------------------
 
+import re as _re
+
 SCHEMA_PREFIX = "nimble"
+
+#: a well-formed kind: lowercase snake, leading letter
+_KIND_RE = _re.compile(r"^[a-z][a-z0-9_]*$")
+
+#: registry of known record kinds -> current schema version.  The static
+#: schema-discipline rule (``repro.analysis``) requires every kind emitted
+#: under ``src/repro`` to be registered here, and the
+#: ``schemas.lock.json`` generator walks this registry alongside the
+#: source scan — bumping a version in a ``tag()`` call without updating
+#: this table is a lint failure *and* a runtime ValueError.
+KNOWN_SCHEMAS = {
+    # core / fabsim
+    "simresult": 1,
+    # runtime (telemetry, estimator, controller, events)
+    "telemetry_window": 1,
+    "telemetry_aggregate": 1,
+    "telemetry_log": 1,
+    "runtime_window": 1,
+    "runtime_stats": 1,
+    "runtime_trace": 1,
+    "link_event": 1,
+    # fabric
+    "fabric_state": 1,
+    "fabric_arbiter": 1,
+    "fabric_arbiter_stats": 1,
+    "fabric_fairness": 1,
+    # faults
+    "fault_schedule": 1,
+    "fault_drill": 1,
+    # serve
+    "serve_scenario": 1,
+    "serve": 1,
+    # api
+    "session": 1,
+    # obs
+    "trace": 1,
+    "metrics": 1,
+    "plan_provenance": 1,
+    "provenance_log": 1,
+    # analysis (ISSUE 9)
+    "lint": 1,
+    "lint_baseline": 1,
+    "schemas_lock": 1,
+    # bench outputs (benchmarks/run.py)
+    "bench_runtime_adapt": 1,
+    "bench_fairness": 1,
+    "bench_faults": 1,
+    "bench_obs": 1,
+    "bench_lint": 1,
+}
+
+
+def known_schemas() -> dict:
+    """Copy of the kind -> current-version registry (consumed by the
+    schema-discipline lint rule and the ``schemas.lock.json`` generator)."""
+    return dict(KNOWN_SCHEMAS)
+
+
+def parse_schema_id(schema_id: str):
+    """Strictly parse ``nimble.<kind>/v<version>`` -> ``(kind, version)``.
+
+    Rejects malformed ids — wrong prefix, bad kind spelling, missing or
+    non-integer version — with a ``ValueError`` naming the offending id.
+    """
+    if not isinstance(schema_id, str):
+        raise ValueError(f"schema id must be a string, got {schema_id!r}")
+    prefix, dot, rest = schema_id.partition(".")
+    if not dot or prefix != SCHEMA_PREFIX:
+        raise ValueError(
+            f"malformed schema id {schema_id!r}: expected prefix "
+            f"'{SCHEMA_PREFIX}.'"
+        )
+    kind, slash, tail = rest.rpartition("/")
+    if not slash:
+        raise ValueError(
+            f"malformed schema id {schema_id!r}: missing '/v<version>'"
+        )
+    if not _KIND_RE.match(kind):
+        raise ValueError(
+            f"malformed schema id {schema_id!r}: kind {kind!r} must match "
+            f"{_KIND_RE.pattern}"
+        )
+    if not tail.startswith("v") or not tail[1:].isdigit():
+        raise ValueError(
+            f"malformed schema id {schema_id!r}: version {tail!r} must be "
+            "'v<integer>'"
+        )
+    version = int(tail[1:])
+    if version < 1:
+        raise ValueError(
+            f"malformed schema id {schema_id!r}: version must be >= 1"
+        )
+    return kind, version
 
 
 def tag(kind: str, payload: dict, version: int = 1) -> dict:
@@ -44,7 +139,28 @@ def tag(kind: str, payload: dict, version: int = 1) -> dict:
     Adds a ``schema`` field (``nimble.<kind>/v<version>``) for consumers to
     dispatch on; ``payload`` keys are carried unchanged.  Key *order* is
     not part of the contract — file writers sort keys for diff stability.
+
+    Strict by construction: a malformed kind or version raises, and a
+    *registered* kind (:data:`KNOWN_SCHEMAS`) tagged at a version other
+    than its registered one raises — version bumps go through the
+    registry, never through a lone call site.
     """
+    if not _KIND_RE.match(kind or ""):
+        raise ValueError(
+            f"malformed schema kind {kind!r}: must match {_KIND_RE.pattern}"
+        )
+    if not isinstance(version, int) or isinstance(version, bool) or version < 1:
+        raise ValueError(
+            f"malformed schema version {version!r} for kind {kind!r}: "
+            "must be an integer >= 1"
+        )
+    registered = KNOWN_SCHEMAS.get(kind)
+    if registered is not None and version != registered:
+        raise ValueError(
+            f"schema kind {kind!r} is registered at v{registered} but was "
+            f"tagged v{version} — update repro.jsonio.KNOWN_SCHEMAS (and "
+            "regenerate schemas.lock.json) to bump it"
+        )
     return {"schema": f"{SCHEMA_PREFIX}.{kind}/v{version}", **payload}
 
 

@@ -1,0 +1,488 @@
+"""Static invariant checker: rules, suppressions, baseline, lock (ISSUE 9).
+
+The analysis contract (DESIGN.md §12), pinned:
+
+  * each of the five rules (``jit-purity``, ``determinism``,
+    ``schema-discipline``, ``frozen-spec``, ``float-eq``) fires on a
+    positive fixture and stays silent on the matching negative one —
+    the false-positive half of the contract is as load-bearing as the
+    true-positive half (a noisy gate gets disabled);
+  * inline suppressions (``# nimble: ignore[<rule-id>] -- reason``)
+    reclassify findings, demand a written reason, and are themselves
+    policed (unknown rule / missing reason / stale);
+  * the committed baseline grandfathers by ``(rule, path, message)`` so
+    line churn never invalidates it, and round-trips through
+    ``nimble.lint_baseline/v1``;
+  * reports carry the ``nimble.lint/v1`` envelope and strict-parse;
+  * meta: the analyzer runs **clean** over ``src/repro`` with the
+    shipped (empty) baseline, and ``schemas.lock.json`` is fresh.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.analysis import (
+    RULES,
+    AnalysisEngine,
+    analyze_paths,
+    analyze_source,
+    default_baseline_path,
+    default_lock_path,
+    generate_schema_lock,
+    load_baseline,
+    lock_is_fresh,
+)
+from repro.analysis.engine import (
+    Finding,
+    build_contexts,
+    parse_suppressions,
+    write_baseline,
+)
+from repro.analysis.rules import (
+    DeterminismRule,
+    FloatEqRule,
+    FrozenSpecRule,
+    JitPurityRule,
+    SchemaDisciplineRule,
+)
+from repro.jsonio import known_schemas, parse_schema_id, tag
+
+pytestmark = pytest.mark.lint
+
+SRC_REPRO = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "src", "repro",
+)
+
+
+def rules_of(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# -- rule 1: jit-purity ----------------------------------------------------------
+
+JIT_POSITIVE = '''
+import time
+import jax
+import jax.numpy as jnp
+
+SEEN = []
+
+@jax.jit
+def step(x, y):
+    t = time.time()            # impure: baked in at trace time
+    if x > 0:                  # branch on traced param
+        y = y + 1
+    v = float(y)               # host cast of a traced value
+    SEEN.append(v)             # mutates closed-over state
+    return x.item()            # host pull
+'''
+
+JIT_NEGATIVE = '''
+import functools
+import jax
+import jax.numpy as jnp
+
+causal = True
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def step(x, blocks, mask=None):
+    if mask is None:           # pytree structure, not a traced value
+        mask = jnp.ones_like(x)
+    if x.shape[0] > 4:         # shape metadata is static under trace
+        x = x * 2
+    if blocks > 1:             # static arg: fine to branch
+        x = x + 1
+    if causal:                 # closure over a host Python value
+        x = x * mask
+    out = []
+    out.append(x)              # local list, not closed-over state
+    return jnp.stack(out)
+'''
+
+
+def test_jit_purity_positive_fixture():
+    report = analyze_source(JIT_POSITIVE, rules=[JitPurityRule()])
+    msgs = [f.message for f in report.findings]
+    assert all(f.rule == "jit-purity" for f in report.findings)
+    assert any("time.time" in m for m in msgs)
+    assert any("if" in m and "traced parameter" in m for m in msgs)
+    assert any("float()" in m for m in msgs)
+    assert any("SEEN.append" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+
+
+def test_jit_purity_negative_fixture():
+    report = analyze_source(JIT_NEGATIVE, rules=[JitPurityRule()])
+    assert report.clean, [str(f) for f in report.findings]
+
+
+def test_jit_purity_scan_body_and_static_spec():
+    src = '''
+import jax
+import jax.lax as lax
+
+@jax.jit(static_argnums=[0, 1])
+def bad_spec(n, m, x):
+    return x
+
+def outer(xs):
+    def body(carry, x):
+        if carry > 0:          # traced carry: retrace hazard
+            carry = carry + x
+        return carry, x
+    return lax.scan(body, 0.0, xs)
+'''
+    report = analyze_source(src, rules=[JitPurityRule()])
+    msgs = [f.message for f in report.findings]
+    assert any("static_argnums" in m for m in msgs)      # list is unhashable
+    assert any("traced parameter(s) ['carry']" in m for m in msgs)
+
+
+# -- rule 2: determinism ---------------------------------------------------------
+
+DET_POSITIVE = '''
+import time
+import random
+import numpy as np
+
+def schedule(tenants):
+    t0 = time.time()
+    jitter = random.random()
+    noise = np.random.rand()
+    for t in {x for x in tenants}:     # hash-order iteration
+        pass
+    order = list(set(tenants))         # hash-order materialization
+    return t0 + jitter + noise
+'''
+
+DET_NEGATIVE = '''
+import numpy as np
+
+def schedule(tenants, seed):
+    rng = np.random.default_rng(seed)
+    jitter = rng.random()
+    for t in sorted(set(tenants)):     # sorted: order is stable
+        pass
+    return jitter
+'''
+
+
+def test_determinism_positive_fixture():
+    report = analyze_source(
+        DET_POSITIVE, path="repro/core/fixture.py",
+        rules=[DeterminismRule()],
+    )
+    msgs = [f.message for f in report.findings]
+    assert any("time.time" in m for m in msgs)
+    assert any("random.random" in m for m in msgs)
+    assert any("numpy.random.rand" in m for m in msgs)
+    assert any("iteration over a set" in m for m in msgs)
+    assert any("list(<set>)" in m for m in msgs)
+
+
+def test_determinism_negative_fixture():
+    report = analyze_source(
+        DET_NEGATIVE, path="repro/fabric/fixture.py",
+        rules=[DeterminismRule()],
+    )
+    assert report.clean, [str(f) for f in report.findings]
+
+
+def test_determinism_scope_is_path_based():
+    # the same wall-clock call outside core/fabric/faults/scenario is fine
+    report = analyze_source(
+        DET_POSITIVE, path="repro/runtime/fixture.py",
+        rules=[DeterminismRule()],
+    )
+    assert report.clean
+
+
+# -- rule 3: schema-discipline ---------------------------------------------------
+
+def _fixture_lock():
+    return {
+        "kinds": {
+            "simresult": {
+                "version": 1,
+                "keys": ["completion_time_s", "total_payload_bytes"],
+                "sites": 1,
+            },
+        },
+    }
+
+
+def test_schema_discipline_positive_fixture():
+    src = '''
+from repro.jsonio import tag
+
+BAD_LITERAL = "nimble.Sim-Result/v1"       # kind fails the spelling rule
+NO_VERSION = "nimble.simresult/vNext"      # non-integer version
+
+def emit(r):
+    return tag("not_a_known_kind", {"x": 1})
+
+def emit2(r):
+    return tag("simresult", {"completion_time_s": 1.0, "surprise_key": 2})
+'''
+    rule = SchemaDisciplineRule(lock=_fixture_lock())
+    report = analyze_source(src, rules=[rule])
+    msgs = [f.message for f in report.findings]
+    assert any("malformed schema reference" in m and "Sim-Result" in m
+               for m in msgs)
+    assert any("malformed schema reference" in m and "vNext" in m
+               for m in msgs)
+    assert any("'not_a_known_kind' is not registered" in m for m in msgs)
+    assert any("surprise_key" in m and "bump the" in m for m in msgs)
+
+
+def test_schema_discipline_negative_fixture():
+    src = '''
+from repro.jsonio import tag
+
+def emit(r):
+    return tag("simresult", {"completion_time_s": r.t})
+'''
+    rule = SchemaDisciplineRule(lock=_fixture_lock())
+    report = analyze_source(src, rules=[rule])
+    assert report.clean, [str(f) for f in report.findings]
+
+
+def test_schema_discipline_version_mismatch():
+    src = 'REF = "nimble.simresult/v9"\n'
+    rule = SchemaDisciplineRule(lock=_fixture_lock())
+    report = analyze_source(src, rules=[rule])
+    assert any("registered at" in f.message for f in report.findings)
+
+
+# -- rule 4: frozen-spec ---------------------------------------------------------
+
+FROZEN_POSITIVE = '''
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    weights: list = []                 # mutable default, shared
+
+def patch(spec):
+    object.__setattr__(spec, "weights", [1])   # outside __post_init__
+'''
+
+FROZEN_NEGATIVE = '''
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    weights: tuple = ()
+    total: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "total", sum(self.weights))
+'''
+
+
+def test_frozen_spec_positive_fixture():
+    report = analyze_source(FROZEN_POSITIVE, rules=[FrozenSpecRule()])
+    msgs = [f.message for f in report.findings]
+    assert any("mutable" in m and "default" in m for m in msgs)
+    assert any("outside a frozen dataclass's" in m for m in msgs)
+
+
+def test_frozen_spec_negative_fixture():
+    report = analyze_source(FROZEN_NEGATIVE, rules=[FrozenSpecRule()])
+    assert report.clean, [str(f) for f in report.findings]
+
+
+# -- rule 5: float-eq ------------------------------------------------------------
+
+def test_float_eq_nan_flagged_everywhere():
+    src = '''
+import math
+import numpy as np
+
+def probe(x):
+    return x == np.nan or x != math.nan or x == float("nan")
+'''
+    report = analyze_source(src, rules=[FloatEqRule()])
+    assert len(report.findings) == 3          # one per comparison operand
+    assert all("NaN" in f.message for f in report.findings)
+
+
+def test_float_eq_literal_only_in_sentinel_paths():
+    src = 'def f(x):\n    return x == 0.25\n'
+    scoped = analyze_source(
+        src, path="repro/runtime/telemetry.py", rules=[FloatEqRule()]
+    )
+    assert any("float-literal equality" in f.message for f in scoped.findings)
+    unscoped = analyze_source(
+        src, path="repro/core/fixture.py", rules=[FloatEqRule()]
+    )
+    assert unscoped.clean
+
+
+def test_float_eq_isnan_is_fine():
+    src = '''
+import numpy as np
+
+def probe(x):
+    return np.isnan(x) or x >= 0.25
+'''
+    report = analyze_source(
+        src, path="repro/runtime/estimator.py", rules=[FloatEqRule()]
+    )
+    assert report.clean
+
+
+# -- suppressions ----------------------------------------------------------------
+
+SUPPRESSED = '''
+import time
+
+def schedule(tenants):
+    return time.time()  # nimble: ignore[determinism] -- wall clock feeds a log label only
+'''
+
+
+def test_suppression_reclassifies_finding():
+    report = analyze_source(
+        SUPPRESSED, path="repro/core/fixture.py", rules=[DeterminismRule()]
+    )
+    assert report.clean
+    assert len(report.suppressed) == 1
+    assert report.suppressed[0].rule == "determinism"
+
+
+def test_suppression_on_line_above():
+    src = (
+        "import time\n"
+        "def f():\n"
+        "    # nimble: ignore[determinism] -- label only\n"
+        "    return time.time()\n"
+    )
+    report = analyze_source(
+        src, path="repro/core/fixture.py", rules=[DeterminismRule()]
+    )
+    assert report.clean and len(report.suppressed) == 1
+
+
+def test_suppression_without_reason_is_a_finding():
+    src = SUPPRESSED.replace(" -- wall clock feeds a log label only", "")
+    report = analyze_source(
+        src, path="repro/core/fixture.py", rules=[DeterminismRule()]
+    )
+    assert "determinism" in rules_of(report)       # not suppressed
+    assert "suppression" in rules_of(report)       # and policed
+
+
+def test_stale_and_unknown_suppressions_are_findings():
+    src = "x = 1  # nimble: ignore[determinism] -- nothing here to suppress\n"
+    report = analyze_source(src, rules=[DeterminismRule()])
+    assert any("matches no finding" in f.message for f in report.findings)
+    src2 = "x = 1  # nimble: ignore[made-up-rule] -- whatever\n"
+    report2 = analyze_source(src2, rules=[DeterminismRule()])
+    assert any("unknown rule" in f.message for f in report2.findings)
+
+
+def test_parse_suppressions_shapes():
+    sups = parse_suppressions(
+        "a = 1  # nimble: ignore[jit-purity, float-eq] -- two at once\n"
+    )
+    assert len(sups) == 1
+    assert sups[0].rules == ("jit-purity", "float-eq")
+    assert sups[0].reason == "two at once"
+
+
+# -- baseline round-trip ---------------------------------------------------------
+
+def test_baseline_roundtrip_and_line_churn(tmp_path):
+    report = analyze_source(
+        DET_POSITIVE, path="repro/core/fixture.py", rules=[DeterminismRule()]
+    )
+    assert not report.clean
+    path = str(tmp_path / "baseline.json")
+    write_baseline(report.findings, path)
+    obj = json.loads(open(path).read())
+    assert obj["schema"] == "nimble.lint_baseline/v1"
+    baseline = load_baseline(path)
+    # shift every line: the (rule, path, message) key must still match
+    churned = "# a new leading comment line\n" + DET_POSITIVE
+    engine = AnalysisEngine([DeterminismRule()], baseline)
+    from repro.analysis import build_context
+
+    rerun = engine.run(
+        [build_context("repro/core/fixture.py", churned, "repro.core")]
+    )
+    assert rerun.clean
+    assert len(rerun.baselined) == len(report.findings)
+
+
+def test_missing_baseline_is_empty():
+    assert load_baseline("/nonexistent/baseline.json") == []
+
+
+# -- report schema ---------------------------------------------------------------
+
+def test_report_carries_lint_v1_envelope():
+    report = analyze_source(DET_POSITIVE, path="repro/core/fixture.py")
+    obj = report.to_json_obj()
+    assert parse_schema_id(obj["schema"]) == ("lint", 1)
+    assert obj["clean"] is False
+    assert obj["files"] == 1
+    assert sum(obj["counts"].values()) == len(obj["findings"])
+    for f in obj["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message"}
+
+
+def test_jsonio_strict_schema_ids():
+    assert parse_schema_id("nimble.lint/v1") == ("lint", 1)
+    for bad in (
+        "lint/v1", "nimble.lint", "nimble.Lint/v1", "nimble.lint/1",
+        "nimble.lint/v0", "nimble.lint/vX", "nimble./v1",
+    ):
+        with pytest.raises(ValueError) as e:
+            parse_schema_id(bad)
+        assert bad in str(e.value)      # the offending id is named
+    with pytest.raises(ValueError):
+        tag("Not-A-Kind", {})
+    with pytest.raises(ValueError):
+        tag("lint", {}, version=0)
+    with pytest.raises(ValueError):     # registered kind, silent bump
+        tag("lint", {}, version=2)
+    assert "lint" in known_schemas()
+    assert tag("brand_new_kind", {"x": 1})["schema"] == "nimble.brand_new_kind/v1"
+
+
+# -- meta: the repo itself gates clean -------------------------------------------
+
+def test_analyzer_clean_over_src_repro():
+    report = analyze_paths(
+        [SRC_REPRO],
+        baseline=load_baseline(),
+        rel_to=os.path.dirname(SRC_REPRO),
+    )
+    assert report.files > 50
+    assert report.clean, "\n".join(str(f) for f in report.findings)
+
+
+def test_shipped_baseline_is_empty():
+    assert load_baseline(default_baseline_path()) == []
+
+
+def test_schema_lock_is_fresh():
+    contexts = build_contexts([SRC_REPRO], rel_to=os.path.dirname(SRC_REPRO))
+    assert lock_is_fresh(default_lock_path(), contexts)
+    # and the generator output carries its own envelope
+    obj = generate_schema_lock(contexts)
+    assert parse_schema_id(obj["schema"]) == ("schemas_lock", 1)
+    assert "lint" in obj["kinds"]
+
+
+def test_injected_violation_is_caught():
+    # the meta-test's teeth: a fresh violation in a scoped path must fail
+    report = analyze_source(
+        "import time\nT0 = time.time()\n",
+        path="repro/fabric/fixture.py",
+    )
+    assert not report.clean
