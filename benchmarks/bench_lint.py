@@ -1,8 +1,9 @@
 """Static-analysis gate: the analyzer's own verdict on src/repro (§12).
 
 Unlike the other benches this one measures *conventions*, not wall
-clock: it runs the full ``repro.analysis`` rule registry over
-``src/repro`` with the committed baseline and checks that
+clock: it runs the full ``repro.analysis`` rule registry — per-file and
+interprocedural — over ``src/repro`` with the committed baseline and
+checks that
 
   * the tree is **clean** — zero live findings (suppressed and
     baselined ones are counted but do not fail the gate; the ``src/``
@@ -10,14 +11,21 @@ clock: it runs the full ``repro.analysis`` rule registry over
     anything);
   * ``schemas.lock.json`` is **fresh** — regenerating it from the
     current sources is a byte-level no-op, so no ``tag()`` call grew a
-    key or bumped a version without going through the lock.
+    key or bumped a version without going through the lock;
+  * ``retrace.lock.json`` is **fresh** and the ``nimble.retrace/v1``
+    trace-boundary inventory is **non-empty with zero PLAN_DEPENDENT
+    sites** — a new plan-dependent trace constant (the hazard that
+    defeats zero-retrace hot swap, ROADMAP item 2) flips the gate even
+    if someone regenerates the lock, because the classification itself
+    is the failure.
 
-Metrics land in ``BENCH_lint.json`` (tagged ``nimble.bench_lint/v1``);
+Metrics land in ``BENCH_lint.json`` (tagged ``nimble.bench_lint/v1``)
+with per-rule finding counts and the retrace-inventory breakdown;
 ``validate_lint`` is the ``static_gate`` in ``benchmarks/run.py
 --smoke``.  Injecting any violation into a scoped layer (say a
-``time.time()`` in ``repro/fabric/``) flips ``clean`` to false and the
-gate raises — that teeth check is pinned by
-``tests/test_analysis.py::test_injected_violation_is_caught``.
+``time.time()`` in ``repro/fabric/``, or a ``program_id``-arithmetic
+slot target into a Pallas kernel) flips the gate — those teeth are
+pinned by ``tests/test_analysis.py`` and ``tests/test_interproc.py``.
 
 Analyzer wall-clock is reported (``lint_wall_us``) but volatile — the
 gate is the verdict, not the speed.
@@ -30,13 +38,16 @@ import time
 
 from repro.analysis import (
     RULES,
-    analyze_paths,
+    AnalysisEngine,
     default_baseline_path,
     default_lock_path,
+    default_retrace_lock_path,
     load_baseline,
     lock_is_fresh,
+    retrace_lock_is_fresh,
 )
 from repro.analysis.engine import build_contexts
+from repro.analysis.rules import RetraceProvenanceRule, UnitsRule
 
 from .common import emit
 
@@ -48,35 +59,63 @@ SRC_REPRO = os.path.join(
 
 def lint_section() -> dict:
     t0 = time.perf_counter()
-    report = analyze_paths(
-        [SRC_REPRO],
-        baseline=load_baseline(default_baseline_path()),
-        rel_to=os.path.dirname(SRC_REPRO),
-    )
     contexts = build_contexts([SRC_REPRO], rel_to=os.path.dirname(SRC_REPRO))
+    engine = AnalysisEngine(
+        RULES, load_baseline(default_baseline_path())
+    )
+    report = engine.run(contexts, root=SRC_REPRO)
     fresh = lock_is_fresh(default_lock_path(), contexts)
+
+    retrace_rule = next(
+        r for r in engine.rules if isinstance(r, RetraceProvenanceRule)
+    )
+    units_rule = next(r for r in engine.rules if isinstance(r, UnitsRule))
+    sites = retrace_rule.sites
+    by_class: dict = {}
+    for s in sites:
+        by_class[s.provenance] = by_class.get(s.provenance, 0) + 1
+    retrace_fresh = retrace_lock_is_fresh(
+        default_retrace_lock_path(), engine.program, retrace_rule.analysis
+    )
     wall_us = (time.perf_counter() - t0) * 1e6
+
+    # per-rule live counts with stable keys, so --compare baselines diff
+    # rule-by-rule instead of only on the total
+    by_rule = {rule.rule_id: 0 for rule in RULES}
+    by_rule["suppression"] = 0
+    by_rule["baseline"] = 0
+    for rule_id, n in report.counts.items():
+        by_rule[rule_id] = n
 
     emit(
         "lint/analyze", wall_us,
         f"files={report.files} findings={len(report.findings)} "
         f"suppressed={len(report.suppressed)} "
-        f"baselined={len(report.baselined)} lock_fresh={fresh}",
+        f"baselined={len(report.baselined)} lock_fresh={fresh} "
+        f"retrace_sites={len(sites)} "
+        f"plan_dependent={by_class.get('PLAN_DEPENDENT', 0)}",
     )
     return {
         "files": report.files,
         "rules": len(RULES),
         "findings": len(report.findings),
+        "findings_by_rule": by_rule,
         "suppressed": len(report.suppressed),
         "baselined": len(report.baselined),
         "clean": report.clean,
         "lock_fresh": fresh,
+        "retrace_lock_fresh": retrace_fresh,
+        "retrace_sites": len(sites),
+        "retrace_plan_dependent": by_class.get("PLAN_DEPENDENT", 0),
+        "retrace_window_dependent": by_class.get("WINDOW_DEPENDENT", 0),
+        "units_mixes": len(units_rule.analysis.mixes),
         "lint_wall_us": wall_us,
     }
 
 
 def validate_lint(metrics: dict) -> None:
-    """The ``static_gate``: clean tree + fresh lock, or raise."""
+    """The ``static_gate``: clean tree + fresh locks + hazard-free
+    trace-boundary inventory, or raise."""
     if not metrics["clean"]:
         raise AssertionError(
             f"static analysis found {metrics['findings']} live finding(s) "
@@ -88,6 +127,24 @@ def validate_lint(metrics: dict) -> None:
             "schemas.lock.json is stale — emitted schema kinds/keys changed "
             "without regenerating it; run "
             "`python -m repro.analysis --write-lock` and commit the result"
+        )
+    if not metrics["retrace_lock_fresh"]:
+        raise AssertionError(
+            "retrace.lock.json is stale — the trace-boundary inventory "
+            "changed; run `python -m repro.analysis --write-lock`, review "
+            "the diff, and commit the result"
+        )
+    if metrics["retrace_sites"] <= 0:
+        raise AssertionError(
+            "retrace inventory is empty — trace-boundary extraction is "
+            "broken, the zero-PLAN_DEPENDENT verdict is vacuous"
+        )
+    if metrics["retrace_plan_dependent"] != 0:
+        raise AssertionError(
+            f"{metrics['retrace_plan_dependent']} PLAN_DEPENDENT trace "
+            "constant(s) reached a jit/scan/pallas boundary — every plan "
+            "swap would retrace (ROADMAP item 2); demote them to runtime "
+            "data (see `python -m repro.analysis --retrace-out -`)"
         )
     if metrics["files"] < 50:
         raise AssertionError(
@@ -107,4 +164,8 @@ def run() -> dict:
 if __name__ == "__main__":
     m = run()
     validate_lint(m)
-    print(f"# lint: clean={m['clean']} lock_fresh={m['lock_fresh']}")
+    print(
+        f"# lint: clean={m['clean']} lock_fresh={m['lock_fresh']} "
+        f"retrace_sites={m['retrace_sites']} "
+        f"plan_dependent={m['retrace_plan_dependent']}"
+    )

@@ -225,14 +225,18 @@ def smoke() -> None:
     lint_metrics = bench_lint.smoke()
     out7 = _write_metrics("BENCH_lint.json", lint_metrics, kind="bench_lint")
     print("# --- static_gate (smoke) ---")
-    # static invariant checker (ISSUE 9): zero live findings over
-    # src/repro with the shipped empty baseline + fresh schemas.lock.json
+    # static invariant checker (ISSUE 9/10): zero live findings over
+    # src/repro with the shipped empty baseline, fresh schemas.lock.json
+    # + retrace.lock.json, and a non-empty trace-boundary inventory with
+    # zero PLAN_DEPENDENT sites
     _gate("static_gate", lambda: bench_lint.validate_lint(lint_metrics))
     print(
         f"# static_gate: {lint_metrics['files']} files, "
         f"{lint_metrics['findings']} finding(s), "
         f"{lint_metrics['suppressed']} suppressed, "
-        f"lock_fresh={lint_metrics['lock_fresh']} "
+        f"lock_fresh={lint_metrics['lock_fresh']}, "
+        f"retrace_sites={lint_metrics['retrace_sites']}, "
+        f"plan_dependent={lint_metrics['retrace_plan_dependent']} "
         f"{'OK' if gates['static_gate'] else 'FAIL'}"
     )
     print("# --- session_api (smoke) ---")
@@ -262,7 +266,8 @@ def smoke() -> None:
         "obs_overhead": f"{obs_metrics['overhead_ratio']:.4f}x",
         "lint": (
             f"{'clean' if lint_metrics['clean'] else 'DIRTY'}"
-            f"({lint_metrics['files']}f)"
+            f"({lint_metrics['files']}f/"
+            f"{lint_metrics['retrace_sites']}s)"
         ),
     }
     stamp = _append_trajectory_row(gates, headline)

@@ -285,12 +285,21 @@ def lint_section():
     if rec is None:
         return
     print("\n### Static analysis (invariant checker)\n")
-    print(
+    line = (
         f"{'clean' if rec['clean'] else 'DIRTY'}: {rec['files']} files, "
         f"{rec['rules']} rules, {rec['findings']} live finding(s) "
         f"({rec['suppressed']} suppressed, {rec['baselined']} baselined), "
         f"schema lock {'fresh' if rec['lock_fresh'] else 'STALE'}"
     )
+    if "retrace_sites" in rec:  # ISSUE 10 fields, absent in older records
+        line += (
+            f"; retrace inventory {rec['retrace_sites']} sites "
+            f"({rec['retrace_plan_dependent']} plan-dependent, "
+            f"{rec['retrace_window_dependent']} window-dependent), "
+            f"retrace lock "
+            f"{'fresh' if rec['retrace_lock_fresh'] else 'STALE'}"
+        )
+    print(line)
 
 
 def main():

@@ -12,15 +12,24 @@ AST-based lint engine (stdlib ``ast``, no new deps) with
   * a :class:`~repro.analysis.engine.Rule` protocol + registry
     (:data:`RULES`) of repo-specific rules (``jit-purity``,
     ``determinism``, ``schema-discipline``, ``frozen-spec``,
-    ``float-eq``, plus ``suppression`` hygiene);
+    ``float-eq``, plus ``suppression`` and ``baseline`` hygiene);
   * a shared per-file resolution context
     (:class:`~repro.analysis.context.FileContext`): import/alias
     resolution, decorator chains, frozen-dataclass detection, known jit
     entry points and ``lax.scan`` bodies;
+  * a whole-program layer (:mod:`repro.analysis.callgraph`) — cached
+    per-function summaries + call graph — driving three
+    *interprocedural* rules (DESIGN.md §12.2): ``retrace-provenance``
+    (the {TOPOLOGY_STABLE, WINDOW_DEPENDENT, PLAN_DEPENDENT} lattice
+    over every jit/scan/pallas trace boundary, inventoried as
+    ``nimble.retrace/v1`` and pinned by ``retrace.lock.json``),
+    ``units`` (bytes | bytes_per_s | fraction | price | windows mixing),
+    and ``xmodule-determinism`` (hash order flowing across calls);
   * inline suppressions — ``# nimble: ignore[<rule-id>] -- reason`` —
     with a mandatory written justification;
   * a committed baseline (``baseline.json``) for grandfathered findings
-    (ships empty for ``src/``);
+    (ships empty for ``src/``; stale or reasonless entries are
+    themselves findings, and ``--debt`` prints the full ledger);
   * a generated ``schemas.lock.json`` key manifest the schema rule
     checks emitted records against (regenerate with ``--write-lock``);
   * a ``nimble.lint/v1`` JSON report through :mod:`repro.jsonio`.
@@ -29,8 +38,10 @@ CLI::
 
     python -m repro.analysis                 # lint src/repro, exit != 0 on findings
     python -m repro.analysis --json report.json
-    python -m repro.analysis --write-lock    # regenerate schemas.lock.json
+    python -m repro.analysis --write-lock    # regenerate both locks + cache
     python -m repro.analysis --check-lock    # lock freshness (no-op regen?)
+    python -m repro.analysis --debt          # suppression/baseline ledger
+    python -m repro.analysis --retrace-out - # nimble.retrace/v1 inventory
 
 Gating: ``python -m repro.api.selfcheck`` check 8 and the
 ``static_gate`` in ``benchmarks/run.py --smoke`` both fail closed on any
@@ -39,6 +50,13 @@ non-baselined finding or a stale lock.
 
 from __future__ import annotations
 
+from .callgraph import (
+    CallGraph,
+    FunctionSummary,
+    Program,
+    SummaryCache,
+    build_program,
+)
 from .context import FileContext, build_context
 from .engine import (
     AnalysisEngine,
@@ -47,26 +65,54 @@ from .engine import (
     Rule,
     analyze_paths,
     analyze_source,
+    analyze_sources,
+    collect_debt,
     default_baseline_path,
     default_lock_path,
     load_baseline,
 )
+from .provenance import (
+    PLAN_DEPENDENT,
+    TOPOLOGY_STABLE,
+    WINDOW_DEPENDENT,
+    analyze_program,
+    build_retrace_inventory,
+    default_retrace_lock_path,
+    retrace_lock_is_fresh,
+)
 from .rules import RULES, generate_schema_lock
 from .schemas import lock_is_fresh
+from .units import analyze_units, build_units_inventory
 
 __all__ = [
     "AnalysisEngine",
     "AnalysisReport",
+    "CallGraph",
     "FileContext",
     "Finding",
+    "FunctionSummary",
+    "PLAN_DEPENDENT",
+    "Program",
     "RULES",
     "Rule",
+    "SummaryCache",
+    "TOPOLOGY_STABLE",
+    "WINDOW_DEPENDENT",
     "analyze_paths",
+    "analyze_program",
     "analyze_source",
+    "analyze_sources",
+    "analyze_units",
     "build_context",
+    "build_program",
+    "build_retrace_inventory",
+    "build_units_inventory",
+    "collect_debt",
     "default_baseline_path",
     "default_lock_path",
+    "default_retrace_lock_path",
     "generate_schema_lock",
     "load_baseline",
     "lock_is_fresh",
+    "retrace_lock_is_fresh",
 ]

@@ -64,7 +64,15 @@ class Finding:
 
 
 class Rule(Protocol):
-    """A lint rule: stateless check over one resolved file context."""
+    """A lint rule: stateless check over one resolved file context.
+
+    Interprocedural rules additionally implement
+    ``prepare(program: repro.analysis.callgraph.Program)`` — the engine
+    builds the whole-program view once per run and calls ``prepare`` on
+    every rule that has it before any ``check``; such rules compute their
+    findings there and replay them per file from ``check(ctx)``, so
+    suppressions and the baseline apply uniformly.
+    """
 
     rule_id: str
     description: str
@@ -135,25 +143,46 @@ def default_lock_path() -> str:
     return os.path.join(os.path.dirname(__file__), "schemas.lock.json")
 
 
-def load_baseline(path: Optional[str] = None) -> List[Tuple[str, str, str]]:
-    """Baseline entries as ``(rule, path, message)`` keys (missing file =
-    empty baseline)."""
+def load_baseline(path: Optional[str] = None) -> List[dict]:
+    """Baseline entries as dicts (``rule``/``path``/``message`` plus the
+    optional ``reason``/``since`` debt fields); missing file = empty."""
     path = path or default_baseline_path()
     if not os.path.exists(path):
         return []
     obj = read_json_file(path)
-    entries = obj.get("entries", [])
-    return [(e["rule"], e["path"], e["message"]) for e in entries]
+    out = []
+    for e in obj.get("entries", []):
+        out.append({
+            "rule": e["rule"], "path": e["path"], "message": e["message"],
+            "reason": e.get("reason", ""), "since": e.get("since", ""),
+        })
+    return out
 
 
-def write_baseline(findings: Sequence[Finding], path: str) -> None:
-    """Write ``findings`` as a fresh baseline (``--update-baseline``)."""
-    write_json_file(path, tag(BASELINE_KIND, {
-        "entries": [
-            {"rule": f.rule, "path": f.path, "message": f.message}
-            for f in sorted(findings, key=lambda f: f.key())
-        ],
-    }))
+def write_baseline(
+    findings: Sequence[Finding], path: str, since: str = ""
+) -> None:
+    """Write ``findings`` as a fresh baseline (``--update-baseline``).
+
+    Reasons survive regeneration: an existing entry's ``reason``/``since``
+    carry over by ``(rule, path, message)`` key.  New entries land with an
+    empty reason — which the engine reports as a ``baseline`` finding
+    until someone writes the justification, so the baseline can only grow
+    *loudly*.
+    """
+    previous = {
+        (e["rule"], e["path"], e["message"]): e
+        for e in load_baseline(path)
+    }
+    entries = []
+    for f in sorted(findings, key=lambda f: f.key()):
+        old = previous.get(f.key(), {})
+        entries.append({
+            "rule": f.rule, "path": f.path, "message": f.message,
+            "reason": old.get("reason", ""),
+            "since": old.get("since", "") or since,
+        })
+    write_json_file(path, tag(BASELINE_KIND, {"entries": entries}))
 
 
 class AnalysisEngine:
@@ -162,11 +191,25 @@ class AnalysisEngine:
     def __init__(
         self,
         rules: Sequence[Rule],
-        baseline: Optional[Sequence[Tuple[str, str, str]]] = None,
+        baseline: Optional[Sequence] = None,
     ):
         self.rules = list(rules)
-        self.rule_ids = {r.rule_id for r in self.rules} | {"suppression"}
-        self.baseline = set(baseline or [])
+        self.rule_ids = {r.rule_id for r in self.rules} | {
+            "suppression", "baseline",
+        }
+        # entries arrive as (rule, path, message) keys or as full dicts
+        self.baseline_entries: Dict[Tuple[str, str, str], dict] = {}
+        for e in baseline or []:
+            if isinstance(e, dict):
+                key = (e["rule"], e["path"], e["message"])
+                self.baseline_entries[key] = {
+                    "reason": e.get("reason", ""),
+                    "since": e.get("since", ""),
+                }
+            else:
+                self.baseline_entries[tuple(e)] = {"reason": "", "since": ""}
+        self.baseline = set(self.baseline_entries)
+        self.program = None  # whole-program view of the last run()
 
     # -- per-file --------------------------------------------------------------
     def check_file(self, ctx: FileContext) -> List[Finding]:
@@ -235,7 +278,14 @@ class AnalysisEngine:
         return out
 
     # -- aggregate -------------------------------------------------------------
-    def run(self, contexts: Iterable[FileContext], root: str = "") -> AnalysisReport:
+    def run(
+        self,
+        contexts: Iterable[FileContext],
+        root: str = "",
+        cache=None,
+    ) -> AnalysisReport:
+        contexts = list(contexts)
+        self.program = self.prepare_rules(contexts, cache=cache)
         live: List[Finding] = []
         suppressed: List[Finding] = []
         baselined: List[Finding] = []
@@ -251,11 +301,56 @@ class AnalysisEngine:
                     baselined.append(f)
                 else:
                     live.append(f)
+        live.extend(self._police_baseline(contexts, baselined))
         live.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
         counts: Dict[str, int] = {}
         for f in live:
             counts[f.rule] = counts.get(f.rule, 0) + 1
         return AnalysisReport(root, files, live, suppressed, baselined, counts)
+
+    def prepare_rules(
+        self, contexts: Sequence[FileContext], cache=None
+    ):
+        """Build the whole-program view once and hand it to every rule
+        that wants it.  Returns the Program (None when no rule needs it)."""
+        interproc = [r for r in self.rules if hasattr(r, "prepare")]
+        if not interproc:
+            return None
+        from .callgraph import build_program
+
+        program = build_program(contexts, cache=cache)
+        for rule in interproc:
+            rule.prepare(program)
+        return program
+
+    def _police_baseline(
+        self,
+        contexts: Sequence[FileContext],
+        baselined: Sequence[Finding],
+    ) -> List[Finding]:
+        """The baseline's own teeth: entries matching nothing in a scanned
+        file are stale, and entries in active use must carry a written
+        reason — either way the committed baseline cannot drift silently."""
+        scanned = {ctx.path for ctx in contexts}
+        used = {f.key() for f in baselined}
+        out: List[Finding] = []
+        for key in sorted(self.baseline_entries):
+            rule, path, message = key
+            entry = self.baseline_entries[key]
+            if key in used:
+                if not entry.get("reason"):
+                    out.append(Finding(
+                        "baseline", path, 0, 0,
+                        f"baseline entry for [{rule}] {message!r} has no "
+                        "written reason — justify it or fix the finding",
+                    ))
+            elif path in scanned:
+                out.append(Finding(
+                    "baseline", path, 0, 0,
+                    f"baseline entry for [{rule}] {message!r} matches no "
+                    "finding — stale, remove it",
+                ))
+        return out
 
 
 # -- discovery ------------------------------------------------------------------
@@ -325,3 +420,62 @@ def analyze_source(
         rules = RULES
     engine = AnalysisEngine(rules)
     return engine.run([build_context(path, source, package)], root=path)
+
+
+def _package_from_rel(path: str) -> str:
+    """``repro/core/x.py`` -> ``repro.core`` (virtual fixture paths)."""
+    parts = path.replace("\\", "/").split("/")[:-1]
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    return ".".join(parts)
+
+
+def analyze_sources(
+    files: Sequence[Tuple[str, str]],
+    rules: Optional[Sequence[Rule]] = None,
+    baseline: Optional[Sequence] = None,
+) -> AnalysisReport:
+    """Lint several in-memory ``(path, source)`` blobs as one program —
+    the fixture entry point for the interprocedural rules, where the
+    finding lives in a different file than its cause."""
+    if rules is None:
+        from .rules import RULES
+
+        rules = RULES
+    engine = AnalysisEngine(rules, baseline)
+    contexts = [
+        build_context(path, source, _package_from_rel(path))
+        for path, source in files
+    ]
+    return engine.run(contexts, root=";".join(p for p, _ in files))
+
+
+# -- suppression/baseline debt ---------------------------------------------------
+
+def collect_debt(
+    contexts: Iterable[FileContext],
+    baseline_entries: Optional[Sequence[dict]] = None,
+) -> dict:
+    """Every grandfathered violation in one ledger (``--debt``).
+
+    Inline suppressions are read straight from the scanned sources;
+    baseline entries come from the committed file, with their
+    ``reason``/``since`` age fields.  The shipped ``src/`` debt should be
+    empty — the teeth test pins that it stays that way.
+    """
+    suppressions = []
+    for ctx in sorted(contexts, key=lambda c: c.path):
+        for s in parse_suppressions(ctx.source):
+            suppressions.append({
+                "path": ctx.path,
+                "line": s.line,
+                "rules": sorted(s.rules),
+                "reason": s.reason,
+            })
+    entries = [dict(e) for e in (baseline_entries or [])]
+    entries.sort(key=lambda e: (e["rule"], e["path"], e["message"]))
+    return {
+        "suppressions": suppressions,
+        "baseline": entries,
+        "total": len(suppressions) + len(entries),
+    }

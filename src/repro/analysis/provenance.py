@@ -1,0 +1,595 @@
+"""Retrace-hazard provenance: which trace-boundary values track the plan?
+
+NIMBLE's zero-retrace hot swap (ROADMAP item 2) only works once every
+plan-varying trace-time constant is found and demoted to runtime data —
+the CUDA-graphs idiom (arxiv 2604.22228) pre-records the transfer graph
+and swaps by *parameter update*, so anything plan-shaped that is baked
+into a jaxpr forces a re-record.  This module classifies every value
+reaching a trace boundary into a three-point lattice
+
+    TOPOLOGY_STABLE  ⊑  WINDOW_DEPENDENT  ⊑  PLAN_DEPENDENT
+
+(stable: changes only with cluster geometry — shapes, incidence tables,
+config; window: changes per telemetry window — prices, loads, demand
+estimates; plan: changes on every plan swap — flows, chunk schedules,
+slot schedules) by running a bounded interprocedural fixpoint over the
+:class:`~repro.analysis.callgraph.Program` summaries.
+
+Boundaries inventoried (``nimble.retrace/v1``):
+
+  * ``jit-static`` — each ``static_argnums``/``static_argnames`` param,
+    classified by joining the provenance of every call-site argument
+    across the whole program;
+  * ``pallas-arg`` — ``pallas_call`` grid / BlockSpecs / out_shape /
+    scratch_shapes / grid_spec expressions;
+  * ``scan-carry`` — ``lax.scan`` carry *shapes* (plan-dependent carry
+    values are traced and fine; plan-dependent ``zeros(...)`` shapes
+    retrace), so only shape-forming calls inside the init are classified;
+  * ``slot-target`` — a scratch-ref subscript inside a Pallas kernel
+    whose index derives from ``program_id`` *arithmetic* is a trace-time
+    slot schedule: the plan owns slot assignment (ROADMAP item 2), so a
+    baked schedule is PLAN_DEPENDENT.  An index read out of a
+    (scalar-prefetched) ref is runtime data and cuts the taint — that is
+    exactly the demotion `kernels/relay_copy` performs.
+
+``retrace.lock.json`` (``nimble.retrace_lock/v1``) pins the inventory
+with line-free keys so line churn never invalidates it; PLAN_DEPENDENT
+findings fire from classification alone — regenerating the lock cannot
+launder a new hazard past the gate.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..jsonio import read_json_file, tag, write_json_file
+from .callgraph import Program, module_name_of
+from .context import FileContext
+
+RETRACE_KIND = "retrace"
+RETRACE_LOCK_KIND = "retrace_lock"
+
+# -- the lattice -----------------------------------------------------------------
+
+TOPOLOGY_STABLE = "TOPOLOGY_STABLE"
+WINDOW_DEPENDENT = "WINDOW_DEPENDENT"
+PLAN_DEPENDENT = "PLAN_DEPENDENT"
+
+_ORDER = {TOPOLOGY_STABLE: 0, WINDOW_DEPENDENT: 1, PLAN_DEPENDENT: 2}
+
+
+def join(a: str, b: str) -> str:
+    """Least upper bound — plan-dependence absorbs everything below it."""
+    return a if _ORDER[a] >= _ORDER[b] else b
+
+
+# -- seeds -----------------------------------------------------------------------
+
+#: callables whose return value IS the plan (or a plan artifact): the
+#: Algorithm-1 solvers, the jitted planner entry points, the dataplane
+#: chunk schedulers.  Matched by basename so wrappers inherit via the
+#: interprocedural pass, not by listing.
+PLAN_RETURNING = {
+    "solve_mwu", "solve_direct", "solve_static_striping", "solve_degraded",
+    "plan_from_flows", "apply_plan_fractions",
+    "plan_flows", "plan_flows_batch", "quantize_chunks",
+    "plan_chunks_jit", "plan_chunks_batch_jit",
+    "solve_plans_batch", "plan_batch", "plan_from_counts", "plan_batched",
+    "_plan",
+}
+
+#: identifier tokens (underscore-split, exact match) that seed a class
+#: when no call-site evidence exists.  Deliberately exact: ``block_chunk``
+#: (a block *size*) must not match ``chunks`` (a chunk *schedule*).
+PLAN_TOKENS = {"plan", "plans", "flow", "flows", "chunks", "slots"}
+WINDOW_TOKENS = {
+    "window", "windows", "price", "prices", "telemetry",
+    "demand", "demands", "load", "loads", "staleness",
+}
+
+#: attribute accesses that stay static under trace — reading shape
+#: metadata off a plan-dependent array yields geometry, not plan
+_METADATA_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+#: shape-forming calls whose *arguments* become trace-time shapes
+_SHAPE_FORMING = {"zeros", "ones", "full", "empty", "arange"}
+
+_PALLAS_BOUNDARY_KWARGS = (
+    "grid", "in_specs", "out_specs", "out_shape", "scratch_shapes",
+    "grid_spec",
+)
+
+
+def classify_name(name: str) -> str:
+    tokens = set(name.lower().split("_"))
+    if tokens & PLAN_TOKENS:
+        return PLAN_DEPENDENT
+    if tokens & WINDOW_TOKENS:
+        return WINDOW_DEPENDENT
+    return TOPOLOGY_STABLE
+
+
+# -- sites -----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraceSite:
+    """One value flowing into one trace boundary."""
+
+    kind: str        # jit-static | pallas-arg | scan-carry | slot-target
+    path: str
+    line: int
+    function: str    # qualname of the function owning the boundary
+    detail: str      # which value: "static:<param>" / "kwarg:<name>" / ...
+    provenance: str
+    note: str = ""
+
+    def lock_key(self) -> str:
+        """Line-free identity — line churn must not invalidate the lock."""
+        return f"{self.kind}:{self.path}:{self.function}:{self.detail}"
+
+    def to_json_obj(self) -> dict:
+        return {
+            "kind": self.kind,
+            "path": self.path,
+            "line": self.line,
+            "function": self.function,
+            "detail": self.detail,
+            "provenance": self.provenance,
+            "note": self.note,
+        }
+
+
+# -- interprocedural fixpoint ----------------------------------------------------
+
+class ProvenanceAnalysis:
+    """Bounded fixpoint: call-site args -> param provenance -> returns.
+
+    Monotone over a finite 3-point lattice, so ≤ 8 sorted rounds is far
+    past convergence for any real call chain in this tree; iteration is
+    sorted everywhere so the result is bit-stable run to run.
+    """
+
+    MAX_ROUNDS = 8
+
+    def __init__(self, program: Program):
+        self.program = program
+        #: qualname -> param -> joined call-site provenance
+        self.param_prov: Dict[str, Dict[str, str]] = {}
+        #: qualname -> return-value provenance
+        self.ret_prov: Dict[str, str] = {}
+        self.rounds = 0
+        self._env_cache: Dict[str, Dict[str, str]] = {}
+        for qual, summary in sorted(program.summaries.items()):
+            self.param_prov[qual] = {}
+            base = qual.rsplit(".", 1)[1]
+            self.ret_prov[qual] = (
+                PLAN_DEPENDENT if base in PLAN_RETURNING
+                else classify_name(base)
+            )
+
+    # -- expression provenance --------------------------------------------------
+    def param_provenance(self, qual: str, param: str) -> str:
+        """Final class of a param: name seed ⊔ every call-site argument."""
+        seeded = classify_name(param)
+        return join(seeded, self.param_prov.get(qual, {}).get(
+            param, TOPOLOGY_STABLE
+        ))
+
+    def _expr(self, ctx: FileContext, env: Dict[str, str],
+              node: ast.AST) -> str:
+        if isinstance(node, ast.Constant):
+            return TOPOLOGY_STABLE
+        if isinstance(node, ast.Name):
+            return env.get(node.id, TOPOLOGY_STABLE)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _METADATA_ATTRS:
+                return TOPOLOGY_STABLE  # shape/dtype of anything is geometry
+            return join(
+                classify_name(node.attr), self._expr(ctx, env, node.value)
+            )
+        if isinstance(node, ast.Subscript):
+            base = node.value
+            if isinstance(base, ast.Name) and base.id.endswith("_ref"):
+                # a ref read is runtime memory — the taint cut that makes
+                # scalar-prefetched slot maps retrace-free
+                return TOPOLOGY_STABLE
+            return join(
+                self._expr(ctx, env, base), self._expr(ctx, env, node.slice)
+            )
+        if isinstance(node, ast.Call):
+            target = ctx.resolve(node.func)
+            base = target.rsplit(".", 1)[-1] if target else ""
+            if base in PLAN_RETURNING:
+                return PLAN_DEPENDENT
+            if target is not None:
+                resolved = self.program.resolve_target(
+                    target, module_name_of(ctx.path)
+                )
+                if resolved is not None:
+                    return self.ret_prov.get(resolved, TOPOLOGY_STABLE)
+            if base == "program_id":
+                return TOPOLOGY_STABLE  # grid coordinate: shape-derived
+            out = TOPOLOGY_STABLE
+            for arg in node.args:
+                out = join(out, self._expr(ctx, env, arg))
+            for kw in node.keywords:
+                out = join(out, self._expr(ctx, env, kw.value))
+            return out
+        if isinstance(node, ast.Lambda):
+            return TOPOLOGY_STABLE  # a lambda value is code, not data
+        out = TOPOLOGY_STABLE
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.expr, ast.keyword)):
+                target = child.value if isinstance(child, ast.keyword) else child
+                out = join(out, self._expr(ctx, env, target))
+        return out
+
+    # -- per-function environment -----------------------------------------------
+    def _env_for(self, qual: str, cache: bool = False) -> Dict[str, str]:
+        if cache and qual in self._env_cache:
+            return self._env_cache[qual]
+        ctx, node = self.program.nodes[qual]
+        summary = self.program.summaries[qual]
+        env: Dict[str, str] = {
+            p: self.param_provenance(qual, p) for p in summary.params
+        }
+        # two forward passes in source order picks up loop-carried joins
+        stmts = sorted(
+            (
+                n for n in ast.walk(node)
+                if isinstance(n, (ast.Assign, ast.AnnAssign, ast.AugAssign,
+                                  ast.For, ast.NamedExpr))
+            ),
+            key=lambda n: (n.lineno, n.col_offset),
+        )
+        for _ in range(2):
+            for stmt in stmts:
+                if isinstance(stmt, ast.For):
+                    prov = self._expr(ctx, env, stmt.iter)
+                    self._bind(env, stmt.target, prov)
+                    continue
+                value = stmt.value
+                if value is None:
+                    continue
+                prov = self._expr(ctx, env, value)
+                targets = (
+                    stmt.targets if isinstance(stmt, ast.Assign)
+                    else [stmt.target]
+                )
+                for t in targets:
+                    self._bind(env, t, prov, augment=isinstance(
+                        stmt, ast.AugAssign
+                    ))
+        if cache:
+            self._env_cache[qual] = env
+        return env
+
+    def _bind(self, env: Dict[str, str], target: ast.AST, prov: str,
+              augment: bool = False) -> None:
+        if isinstance(target, ast.Name):
+            old = env.get(target.id, TOPOLOGY_STABLE)
+            env[target.id] = join(old, prov) if augment else join(
+                prov, old if target.id in env else TOPOLOGY_STABLE
+            )
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(env, elt, prov, augment)
+        elif isinstance(target, ast.Starred):
+            self._bind(env, target.value, prov, augment)
+
+    # -- fixpoint ---------------------------------------------------------------
+    def run(self) -> "ProvenanceAnalysis":
+        for self.rounds in range(1, self.MAX_ROUNDS + 1):
+            if not self._round():
+                break
+        self._env_cache.clear()
+        return self
+
+    def _round(self) -> bool:
+        changed = False
+        for qual in sorted(self.program.nodes):
+            ctx, node = self.program.nodes[qual]
+            summary = self.program.summaries[qual]
+            env = self._env_for(qual)
+            module = summary.module
+            # returns: only this function's own return statements
+            ret = self.ret_prov[qual]
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) and sub.value is not None:
+                    if ctx.enclosing_function(sub) is node:
+                        ret = join(ret, self._expr(ctx, env, sub.value))
+                elif isinstance(sub, ast.Call):
+                    changed |= self._flow_call(ctx, env, module, sub)
+            if ret != self.ret_prov[qual]:
+                self.ret_prov[qual] = ret
+                changed = True
+        return changed
+
+    def _flow_call(self, ctx: FileContext, env: Dict[str, str],
+                   module: str, call: ast.Call) -> bool:
+        target = ctx.resolve(call.func)
+        if target is None:
+            return False
+        resolved = self.program.resolve_target(target, module)
+        if resolved is None:
+            return False
+        callee = self.program.summaries[resolved]
+        params = list(callee.params)
+        offset = 0
+        if params and params[0] in ("self", "cls") and isinstance(
+            call.func, ast.Attribute
+        ):
+            offset = 1
+        changed = False
+        slots = self.param_prov[resolved]
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                continue
+            idx = i + offset
+            if idx >= len(params):
+                break
+            changed |= self._join_param(
+                slots, params[idx], self._expr(ctx, env, arg)
+            )
+        for kw in call.keywords:
+            if kw.arg is None or kw.arg not in params:
+                continue
+            changed |= self._join_param(
+                slots, kw.arg, self._expr(ctx, env, kw.value)
+            )
+        return changed
+
+    @staticmethod
+    def _join_param(slots: Dict[str, str], param: str, prov: str) -> bool:
+        old = slots.get(param, TOPOLOGY_STABLE)
+        new = join(old, prov)
+        if new != old:
+            slots[param] = new
+            return True
+        return False
+
+    # -- boundary extraction ----------------------------------------------------
+    def trace_sites(self) -> List[TraceSite]:
+        sites: List[TraceSite] = []
+        node_to_qual = {
+            node: qual for qual, (_, node) in self.program.nodes.items()
+        }
+        for ctx in self.program.contexts:
+            module = module_name_of(ctx.path)
+            for info in ctx.jit_functions:
+                qual = node_to_qual.get(info.node)
+                if qual is None:
+                    qual = f"{module}.{info.name}"
+                if info.kind == "jit" and info.static_params:
+                    sites.extend(self._jit_sites(ctx, info, qual))
+                elif info.kind == "pallas":
+                    sites.extend(self._slot_sites(ctx, info, qual))
+            sites.extend(self._call_boundary_sites(ctx, module, node_to_qual))
+        dedup: Dict[str, TraceSite] = {}
+        for s in sorted(sites, key=lambda s: (s.path, s.line, s.detail)):
+            dedup.setdefault(s.lock_key(), s)
+        return sorted(
+            dedup.values(), key=lambda s: (s.path, s.line, s.detail)
+        )
+
+    def _jit_sites(self, ctx, info, qual) -> Iterable[TraceSite]:
+        for p in sorted(info.static_params):
+            prov = self.param_provenance(qual, p)
+            yield TraceSite(
+                "jit-static", ctx.path, info.node.lineno, qual,
+                f"static:{p}", prov,
+                "every distinct value recompiles; plan-dependent statics "
+                "defeat hot swap" if prov == PLAN_DEPENDENT else
+                "recompiles per distinct value",
+            )
+
+    def _call_boundary_sites(
+        self, ctx: FileContext, module: str, node_to_qual: Dict
+    ) -> Iterable[TraceSite]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.resolve(node.func)
+            if target is None:
+                continue
+            fn = ctx.enclosing_function(node)
+            qual = node_to_qual.get(fn)
+            if qual is None:
+                qual = f"{module}.<module>"
+            env = (
+                self._env_for(qual, cache=True)
+                if qual in self.program.nodes else {}
+            )
+            if target.endswith("pallas_call"):
+                for kw in node.keywords:
+                    if kw.arg not in _PALLAS_BOUNDARY_KWARGS:
+                        continue
+                    prov = self._expr(ctx, env, kw.value)
+                    yield TraceSite(
+                        "pallas-arg", ctx.path, kw.value.lineno, qual,
+                        f"kwarg:{kw.arg}", prov,
+                        "kernel re-lowers when this changes",
+                    )
+            elif target in ("jax.lax.scan", "lax.scan"):
+                init = None
+                if len(node.args) >= 2:
+                    init = node.args[1]
+                for kw in node.keywords:
+                    if kw.arg == "init":
+                        init = kw.value
+                if init is None:
+                    continue
+                prov = self._carry_shape_prov(ctx, env, init)
+                yield TraceSite(
+                    "scan-carry", ctx.path, init.lineno, qual, "carry",
+                    prov,
+                    "carry *shape* provenance (values are traced and free)",
+                )
+
+    def _carry_shape_prov(self, ctx, env, init: ast.AST) -> str:
+        """Plan-dependent carry values are fine; plan-dependent carry
+        *shapes* retrace — classify only shape-forming call arguments."""
+        out = TOPOLOGY_STABLE
+        for sub in ast.walk(init):
+            if not isinstance(sub, ast.Call):
+                continue
+            target = ctx.resolve(sub.func) or ""
+            if target.rsplit(".", 1)[-1] not in _SHAPE_FORMING:
+                continue
+            for arg in sub.args:
+                out = join(out, self._expr(ctx, env, arg))
+            for kw in sub.keywords:
+                if kw.arg == "shape":
+                    out = join(out, self._expr(ctx, env, kw.value))
+        return out
+
+    # -- slot targets ------------------------------------------------------------
+    def _slot_sites(self, ctx, info, qual) -> Iterable[TraceSite]:
+        params = {
+            a.arg for a in getattr(info.node, "args").posonlyargs
+            + getattr(info.node, "args").args
+        } if hasattr(info.node, "args") else set()
+        # local one-hop defs: name -> index classification of its RHS
+        local: Dict[str, str] = {}
+        for sub in ast.walk(info.node):
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and (
+                isinstance(sub.targets[0], ast.Name)
+            ):
+                local[sub.targets[0].id] = self._index_class(
+                    ctx, params, local, sub.value
+                )
+        for sub in ast.walk(info.node):
+            if not isinstance(sub, ast.Subscript):
+                continue
+            base = sub.value
+            if not (isinstance(base, ast.Name) and base.id in params):
+                continue
+            cls = self._index_class(ctx, params, local, sub.slice)
+            if cls == "const":
+                continue  # x_ref[...] block reads are not slot targets
+            if cls == "ref":
+                prov, note = TOPOLOGY_STABLE, (
+                    "slot read from a ref — runtime data, retargetable "
+                    "without retrace"
+                )
+            elif cls == "pid-arith":
+                prov, note = PLAN_DEPENDENT, (
+                    "slot schedule baked from program_id arithmetic at "
+                    "trace time — the plan owns slot assignment "
+                    "(ROADMAP item 2); demote to a scalar-prefetched "
+                    "slot map"
+                )
+            else:  # bare program_id: the grid coordinate itself
+                prov, note = TOPOLOGY_STABLE, (
+                    "indexed by the raw grid coordinate"
+                )
+            yield TraceSite(
+                "slot-target", ctx.path, sub.lineno, qual,
+                f"slot:{base.id}", prov, note,
+            )
+
+    def _index_class(self, ctx, params: Set[str], local: Dict[str, str],
+                     node: ast.AST) -> str:
+        """'ref' | 'pid-arith' | 'pid' | 'const' for a subscript index."""
+        if isinstance(node, ast.Name):
+            return local.get(node.id, "const")
+        if isinstance(node, ast.Subscript):
+            base = node.value
+            if isinstance(base, ast.Name) and base.id in params:
+                return "ref"
+            return self._index_class(ctx, params, local, base)
+        if isinstance(node, ast.Call):
+            target = ctx.resolve(node.func) or ""
+            if target.rsplit(".", 1)[-1] == "program_id":
+                return "pid"
+            classes = [
+                self._index_class(ctx, params, local, a) for a in node.args
+            ]
+            return _strongest(classes)
+        if isinstance(node, (ast.BinOp, ast.UnaryOp, ast.BoolOp,
+                             ast.Compare, ast.IfExp, ast.Tuple)):
+            children = [
+                c for c in ast.iter_child_nodes(node)
+                if isinstance(c, ast.expr)
+            ]
+            classes = [
+                self._index_class(ctx, params, local, c) for c in children
+            ]
+            strongest = _strongest(classes)
+            if strongest == "pid" and isinstance(node, ast.BinOp):
+                return "pid-arith"  # arithmetic on the grid coordinate
+            return strongest
+        return "const"
+
+
+_INDEX_ORDER = {"const": 0, "pid": 1, "pid-arith": 2, "ref": 3}
+
+
+def _strongest(classes: Iterable[str]) -> str:
+    best = "const"
+    for c in classes:
+        if _INDEX_ORDER[c] > _INDEX_ORDER[best]:
+            best = c
+    return best
+
+
+# -- inventory + lock ------------------------------------------------------------
+
+def analyze_program(program: Program) -> ProvenanceAnalysis:
+    return ProvenanceAnalysis(program).run()
+
+
+def build_retrace_inventory(
+    program: Program, analysis: Optional[ProvenanceAnalysis] = None
+) -> dict:
+    """The ``nimble.retrace/v1`` site inventory — the work-list the
+    zero-retrace PR consumes."""
+    analysis = analysis or analyze_program(program)
+    sites = analysis.trace_sites()
+    counts = {TOPOLOGY_STABLE: 0, WINDOW_DEPENDENT: 0, PLAN_DEPENDENT: 0}
+    for s in sites:
+        counts[s.provenance] += 1
+    return tag(RETRACE_KIND, {
+        "files": len(program.contexts),
+        "sites": [s.to_json_obj() for s in sites],
+        "counts": counts,
+        "rounds": analysis.rounds,
+    })
+
+
+def default_retrace_lock_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "retrace.lock.json")
+
+
+def generate_retrace_lock_obj(
+    program: Program, analysis: Optional[ProvenanceAnalysis] = None
+) -> dict:
+    analysis = analysis or analyze_program(program)
+    entries = {
+        s.lock_key(): s.provenance for s in analysis.trace_sites()
+    }
+    return tag(RETRACE_LOCK_KIND, {
+        "entries": {k: entries[k] for k in sorted(entries)},
+    })
+
+
+def write_retrace_lock(
+    program: Program, path: str,
+    analysis: Optional[ProvenanceAnalysis] = None,
+) -> dict:
+    obj = generate_retrace_lock_obj(program, analysis)
+    write_json_file(path, obj)
+    return obj
+
+
+def retrace_lock_is_fresh(
+    path: str, program: Program,
+    analysis: Optional[ProvenanceAnalysis] = None,
+) -> bool:
+    if not os.path.exists(path):
+        return False
+    committed = read_json_file(path)
+    return committed == generate_retrace_lock_obj(program, analysis)

@@ -574,6 +574,164 @@ class FloatEqRule:
         )
 
 
+# -- interprocedural rules (DESIGN.md §12.2) -------------------------------------
+#
+# These run over the whole-program view: the engine calls ``prepare(program)``
+# once per run, the rule computes findings there, and ``check(ctx)`` replays
+# them per file so suppressions/baseline apply exactly like per-file rules.
+
+class _InterprocRule:
+    """Shared prepare/replay plumbing for whole-program rules."""
+
+    def __init__(self):
+        self._findings: Dict[str, List[Finding]] = {}
+
+    def _store(self, finding: Finding) -> None:
+        self._findings.setdefault(finding.path, []).append(finding)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        yield from self._findings.get(ctx.path, ())
+
+
+class RetraceProvenanceRule(_InterprocRule):
+    """PLAN_DEPENDENT values baked into trace boundaries (tentpole 1).
+
+    The inventory itself (``nimble.retrace/v1``) records *every* boundary
+    with its lattice class; only PLAN_DEPENDENT sites are findings — they
+    are the constants that defeat zero-retrace hot swap (ROADMAP item 2).
+    WINDOW_DEPENDENT sites stay inventory-only: a per-window retrace is a
+    cost decision for the swap PR, not a silent correctness hazard.
+    """
+
+    rule_id = "retrace-provenance"
+    description = (
+        "plan-dependent trace-time constants at jit/scan/pallas boundaries"
+    )
+
+    def __init__(self):
+        super().__init__()
+        self.analysis = None
+        self.sites: List = []
+
+    def prepare(self, program) -> None:
+        from .provenance import PLAN_DEPENDENT, analyze_program
+
+        self._findings = {}
+        self.analysis = analyze_program(program)
+        self.sites = self.analysis.trace_sites()
+        for s in self.sites:
+            if s.provenance != PLAN_DEPENDENT:
+                continue
+            self._store(Finding(
+                self.rule_id, s.path, s.line, 0,
+                f"{s.kind} `{s.detail}` in `{s.function}` is "
+                f"PLAN_DEPENDENT — {s.note}",
+            ))
+
+
+class UnitsRule(_InterprocRule):
+    """Unit mixing across bytes | bytes_per_s | fraction | price | windows."""
+
+    rule_id = "units"
+    description = (
+        "unit mixing against the seeded bytes/rate/fraction/price/window "
+        "lattice"
+    )
+
+    def __init__(self):
+        super().__init__()
+        self.analysis = None
+
+    def prepare(self, program) -> None:
+        from .units import analyze_units
+
+        self._findings = {}
+        self.analysis = analyze_units(program)
+        for m in self.analysis.mixes:
+            self._store(Finding(
+                self.rule_id, m.path, m.line, m.col,
+                f"`{m.function}` {m.message}",
+            ))
+
+
+class CrossModuleDeterminismRule(_InterprocRule):
+    """Hash-ordered returns iterated in deterministic layers.
+
+    The per-file determinism rule sees ``for x in {a, b}``; it cannot see
+    ``for x in other_module.live_set()``.  This rule propagates the
+    "returns set-iteration order" bit through the call graph (a function
+    returning another hash-ordered function's result is hash-ordered too)
+    and flags order-sensitive consumption — ledger commit order, schedule
+    order, report key order — anywhere in the deterministic scope.
+    """
+
+    rule_id = "xmodule-determinism"
+    description = (
+        "set-iteration order flowing across call boundaries into "
+        "deterministic outputs"
+    )
+
+    _CONSUMERS = {"list", "tuple", "enumerate"}
+
+    def prepare(self, program) -> None:
+        from .callgraph import module_name_of
+
+        self._findings = {}
+        hash_order = {
+            q for q, s in program.summaries.items() if s.return_hash_order
+        }
+        # propagate through return_calls until stable (finite, monotone)
+        while True:
+            grew = False
+            for qual, s in sorted(program.summaries.items()):
+                if qual in hash_order:
+                    continue
+                for target in s.return_calls:
+                    resolved = program.resolve_target(target, s.module)
+                    if resolved in hash_order:
+                        hash_order.add(qual)
+                        grew = True
+                        break
+            if not grew:
+                break
+        self._hash_order = hash_order
+        for ctx in program.contexts:
+            if not _in_scope(ctx.path, _DETERMINISM_SCOPE):
+                continue
+            module = module_name_of(ctx.path)
+            for node in ast.walk(ctx.tree):
+                call = self._consumed_call(ctx, node)
+                if call is None:
+                    continue
+                target = ctx.resolve(call.func)
+                if target is None:
+                    continue
+                resolved = program.resolve_target(target, module)
+                if resolved is None or resolved not in hash_order:
+                    continue
+                # anchor on the call: `ast.comprehension` has no lineno
+                self._store(Finding(
+                    self.rule_id, ctx.path, call.lineno, call.col_offset,
+                    f"iterates the hash-ordered return of `{resolved}` — "
+                    "set iteration order leaks into a deterministic "
+                    "output; sort at the producer or wrap in sorted(...)",
+                ))
+
+    def _consumed_call(
+        self, ctx: FileContext, node: ast.AST
+    ) -> Optional[ast.Call]:
+        """The function call whose result ``node`` consumes order from."""
+        if isinstance(node, (ast.For, ast.comprehension)):
+            it = node.iter
+            return it if isinstance(it, ast.Call) else None
+        if isinstance(node, ast.Call) and ctx.resolve(node.func) in (
+            self._CONSUMERS
+        ):
+            if node.args and isinstance(node.args[0], ast.Call):
+                return node.args[0]
+        return None
+
+
 # -- registry --------------------------------------------------------------------
 
 RULES = (
@@ -582,6 +740,9 @@ RULES = (
     SchemaDisciplineRule(),
     FrozenSpecRule(),
     FloatEqRule(),
+    RetraceProvenanceRule(),
+    UnitsRule(),
+    CrossModuleDeterminismRule(),
 )
 
 

@@ -81,6 +81,12 @@ KNOWN_SCHEMAS = {
     "lint": 1,
     "lint_baseline": 1,
     "schemas_lock": 1,
+    # analysis dataflow (ISSUE 10)
+    "retrace": 1,
+    "retrace_lock": 1,
+    "units": 1,
+    "callgraph": 1,
+    "lint_debt": 1,
     # bench outputs (benchmarks/run.py)
     "bench_runtime_adapt": 1,
     "bench_fairness": 1,

@@ -1,0 +1,424 @@
+"""Cross-module dataflow layer: call graph, summary cache, and the three
+interprocedural rules (ISSUE 10, DESIGN.md §12.2).
+
+Pinned here:
+
+  * the call-graph substrate — a golden multi-file fixture resolves
+    module-local, cross-module (relative import), and aliased calls into
+    the exact `nimble.callgraph/v1` edge set;
+  * the digest-keyed summary cache — cold build misses, warm build hits,
+    and editing one file invalidates exactly that file's entries;
+  * each interprocedural rule fires on a positive multi-file fixture and
+    stays silent on the matching negative one (the false-positive half
+    keeps the gate trusted, same contract as ``tests/test_analysis.py``);
+  * the teeth: an injected PLAN_DEPENDENT trace constant — the
+    ``program_id``-arithmetic slot schedule the relay kernel used to
+    bake in, and a planner product flowing cross-module into a jit
+    static arg — must come back as a live ``retrace-provenance``
+    finding.
+"""
+
+import json
+
+import pytest
+
+from repro.analysis import (
+    SummaryCache,
+    analyze_sources,
+    build_context,
+    build_program,
+)
+from repro.analysis.callgraph import (
+    FunctionSummary,
+    module_name_of,
+    source_digest,
+    summarize_module,
+)
+from repro.analysis.provenance import (
+    PLAN_DEPENDENT,
+    TOPOLOGY_STABLE,
+    WINDOW_DEPENDENT,
+    join,
+)
+from repro.analysis.rules import (
+    CrossModuleDeterminismRule,
+    RetraceProvenanceRule,
+    UnitsRule,
+)
+from repro.jsonio import parse_schema_id
+
+pytestmark = pytest.mark.lint
+
+
+def rules_of(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# -- call-graph substrate --------------------------------------------------------
+
+ALPHA = '''
+def helper(x):
+    return x + 1
+
+def outer(x):
+    return helper(x)
+'''
+
+BETA = '''
+from .alpha import outer as entry
+
+def run(x):
+    return entry(x)
+'''
+
+
+def _contexts(files):
+    return [
+        build_context(path, src, path.rsplit("/", 1)[0].replace("/", "."))
+        for path, src in files
+    ]
+
+
+def test_call_graph_golden_fixture():
+    program = build_program(_contexts([
+        ("repro/core/alpha.py", ALPHA),
+        ("repro/core/beta.py", BETA),
+    ]))
+    obj = program.call_graph().to_json_obj()
+    assert parse_schema_id(obj["schema"]) == ("callgraph", 1)
+    assert obj["functions"] == 3
+    # module-local call, plus a cross-module aliased relative import,
+    # both resolved to qualnames — the exact edge set, nothing extra
+    assert obj["edges"] == {
+        "repro.core.alpha.outer": ["repro.core.alpha.helper"],
+        "repro.core.beta.run": ["repro.core.alpha.outer"],
+    }
+    assert json.loads(json.dumps(obj)) == obj
+    graph = program.call_graph()
+    assert graph.callers("repro.core.alpha.outer") == ["repro.core.beta.run"]
+    assert graph.n_edges == 2
+
+
+def test_module_name_and_digest():
+    assert module_name_of("repro/core/cost.py") == "repro.core.cost"
+    assert module_name_of("repro/fabric/__init__.py") == "repro.fabric"
+    assert source_digest("a = 1\n") == source_digest("a = 1\n")
+    assert source_digest("a = 1\n") != source_digest("a = 2\n")
+
+
+def test_function_summary_roundtrip():
+    (ctx,) = _contexts([("repro/core/alpha.py", ALPHA)])
+    for summary in summarize_module(ctx):
+        assert FunctionSummary.from_json_obj(
+            summary.to_json_obj()
+        ) == summary
+
+
+def test_summary_cache_invalidation_on_edit(tmp_path):
+    path = str(tmp_path / "summaries.cache.json")
+    files = [("repro/core/alpha.py", ALPHA), ("repro/core/beta.py", BETA)]
+
+    cold = SummaryCache(path)
+    build_program(_contexts(files), cache=cold)
+    assert (cold.hits, cold.misses) == (0, 2)
+    cold.save()
+
+    warm = SummaryCache(path)
+    build_program(_contexts(files), cache=warm)
+    assert (warm.hits, warm.misses) == (2, 0)
+
+    # editing one file invalidates exactly that file's entries
+    edited = [("repro/core/alpha.py", ALPHA + "\nZ = 1\n"), files[1]]
+    partial = SummaryCache(path)
+    program = build_program(_contexts(edited), cache=partial)
+    assert (partial.hits, partial.misses) == (1, 1)
+    # and the recomputed program still resolves the same graph
+    assert program.call_graph().edges["repro.core.beta.run"] == [
+        "repro.core.alpha.outer"
+    ]
+
+
+def test_lattice_join_order():
+    assert join(TOPOLOGY_STABLE, WINDOW_DEPENDENT) == WINDOW_DEPENDENT
+    assert join(WINDOW_DEPENDENT, PLAN_DEPENDENT) == PLAN_DEPENDENT
+    assert join(PLAN_DEPENDENT, TOPOLOGY_STABLE) == PLAN_DEPENDENT
+
+
+# -- rule 6: retrace-provenance --------------------------------------------------
+
+# the exact hazard the relay kernel shipped with before ISSUE 10: a slot
+# schedule computed from program_id arithmetic is baked per trace
+SLOT_POSITIVE = '''
+import jax
+from jax.experimental import pallas as pl
+
+def _kernel(x_ref, o_ref, buf):
+    slot = pl.program_id(0) % 2
+    buf[slot] = x_ref[...]
+    o_ref[...] = buf[slot]
+
+def run(x):
+    return pl.pallas_call(_kernel, grid=(4,),
+                          out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+'''
+
+# the demotion: the slot is read out of a (scalar-prefetched) ref —
+# runtime data, retargetable without retrace
+SLOT_NEGATIVE = '''
+import jax
+from jax.experimental import pallas as pl
+
+def _kernel(s_ref, x_ref, o_ref, buf):
+    slot = s_ref[pl.program_id(0)]
+    buf[slot] = x_ref[...]
+    o_ref[...] = buf[slot]
+
+def run(s, x):
+    return pl.pallas_call(_kernel, grid=(4,),
+                          out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(s, x)
+'''
+
+
+def test_retrace_injected_slot_schedule_is_caught():
+    report = analyze_sources(
+        [("repro/kernels/fixture.py", SLOT_POSITIVE)],
+        rules=[RetraceProvenanceRule()],
+    )
+    assert not report.clean
+    (f,) = [x for x in report.findings if "slot" in x.message]
+    assert f.rule == "retrace-provenance"
+    assert "PLAN_DEPENDENT" in f.message
+    assert "slot map" in f.message          # the finding names the fix
+
+
+def test_retrace_scalar_prefetched_slot_is_clean():
+    report = analyze_sources(
+        [("repro/kernels/fixture.py", SLOT_NEGATIVE)],
+        rules=[RetraceProvenanceRule()],
+    )
+    assert report.clean, [str(f) for f in report.findings]
+
+
+PLANNER_MOD = '''
+def plan_flows(demand):
+    return [demand, demand]
+'''
+
+EXEC_PLAN_STATIC = '''
+import functools
+import jax
+
+from ..core.mplan import plan_flows
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def run(x, n):
+    return x * n
+
+def driver(x, demand):
+    p = plan_flows(demand)
+    return run(x, len(p))
+'''
+
+EXEC_SHAPE_STATIC = '''
+import functools
+import jax
+
+from ..core.mplan import plan_flows
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def run(x, n):
+    return x * n
+
+def driver(x, demand):
+    p = plan_flows(demand)
+    out = run(x, x.shape[0])    # geometry, not plan
+    return out, p
+'''
+
+
+def test_retrace_plan_reaches_jit_static_cross_module():
+    report = analyze_sources(
+        [
+            ("repro/core/mplan.py", PLANNER_MOD),
+            ("repro/runtime/mexec.py", EXEC_PLAN_STATIC),
+        ],
+        rules=[RetraceProvenanceRule()],
+    )
+    hits = [
+        f for f in report.findings
+        if f.path == "repro/runtime/mexec.py" and "static:n" in f.message
+    ]
+    assert hits, [str(f) for f in report.findings]
+    assert "PLAN_DEPENDENT" in hits[0].message
+
+
+def test_retrace_shape_metadata_cuts_the_taint():
+    report = analyze_sources(
+        [
+            ("repro/core/mplan.py", PLANNER_MOD),
+            ("repro/runtime/mexec.py", EXEC_SHAPE_STATIC),
+        ],
+        rules=[RetraceProvenanceRule()],
+    )
+    assert report.clean, [str(f) for f in report.findings]
+
+
+# -- rule 7: units ---------------------------------------------------------------
+
+UNITS_POSITIVE = '''
+def admit(payload_bytes, alpha_frac):
+    return payload_bytes + alpha_frac
+'''
+
+UNITS_NEGATIVE = '''
+def admit(payload_bytes, alpha_frac, total_bytes):
+    scaled = payload_bytes * alpha_frac      # fraction scales freely
+    share = payload_bytes / total_bytes      # bytes/bytes -> fraction
+    return scaled, share + alpha_frac        # fraction + fraction
+'''
+
+SENDER_MOD = '''
+def send(payload_bytes):
+    return payload_bytes
+'''
+
+CALLER_MIX = '''
+from .sender import send
+
+def relay(alpha_frac):
+    return send(alpha_frac)
+'''
+
+CALLER_OK = '''
+from .sender import send
+
+def relay(chunk_bytes):
+    return send(chunk_bytes)
+'''
+
+
+def test_units_mixing_in_one_function():
+    report = analyze_sources(
+        [("repro/core/ufix.py", UNITS_POSITIVE)], rules=[UnitsRule()]
+    )
+    assert rules_of(report) == ["units"]
+    (f,) = report.findings
+    assert "bytes" in f.message and "fraction" in f.message
+
+
+def test_units_fraction_algebra_is_clean():
+    report = analyze_sources(
+        [("repro/core/ufix.py", UNITS_NEGATIVE)], rules=[UnitsRule()]
+    )
+    assert report.clean, [str(f) for f in report.findings]
+
+
+def test_units_cross_module_signature_mismatch():
+    report = analyze_sources(
+        [
+            ("repro/fabric/sender.py", SENDER_MOD),
+            ("repro/fabric/caller.py", CALLER_MIX),
+        ],
+        rules=[UnitsRule()],
+    )
+    assert not report.clean
+    (f,) = report.findings
+    assert f.path == "repro/fabric/caller.py"
+    assert "expects" in f.message and "payload_bytes" in f.message
+
+
+def test_units_cross_module_matching_units_clean():
+    report = analyze_sources(
+        [
+            ("repro/fabric/sender.py", SENDER_MOD),
+            ("repro/fabric/caller.py", CALLER_OK),
+        ],
+        rules=[UnitsRule()],
+    )
+    assert report.clean, [str(f) for f in report.findings]
+
+
+# -- rule 8: xmodule-determinism -------------------------------------------------
+
+LIVE_SET_MOD = '''
+def live_nodes(xs):
+    return set(xs)
+'''
+
+# one hop of indirection: the wrapper's return inherits hash order
+LIVE_WRAP_MOD = '''
+from .live import live_nodes
+
+def active(xs):
+    return live_nodes(xs)
+'''
+
+CONSUMER_BAD = '''
+from ..fabric.wrap import active
+
+def commit_order(xs):
+    return [n for n in active(xs)]
+'''
+
+CONSUMER_OK = '''
+from ..fabric.wrap import active
+
+def commit_order(xs):
+    return sorted(active(xs))
+'''
+
+
+def test_xmodule_hash_order_consumption_is_caught():
+    report = analyze_sources(
+        [
+            ("repro/fabric/live.py", LIVE_SET_MOD),
+            ("repro/fabric/wrap.py", LIVE_WRAP_MOD),
+            ("repro/core/sched.py", CONSUMER_BAD),
+        ],
+        rules=[CrossModuleDeterminismRule()],
+    )
+    assert not report.clean
+    (f,) = report.findings
+    assert f.rule == "xmodule-determinism"
+    assert f.path == "repro/core/sched.py"
+    assert "repro.fabric.wrap.active" in f.message
+
+
+def test_xmodule_sorted_consumption_is_clean():
+    report = analyze_sources(
+        [
+            ("repro/fabric/live.py", LIVE_SET_MOD),
+            ("repro/fabric/wrap.py", LIVE_WRAP_MOD),
+            ("repro/core/sched.py", CONSUMER_OK),
+        ],
+        rules=[CrossModuleDeterminismRule()],
+    )
+    assert report.clean, [str(f) for f in report.findings]
+
+
+def test_xmodule_scope_is_path_based():
+    # the same consumption outside the deterministic layers is free
+    report = analyze_sources(
+        [
+            ("repro/fabric/live.py", LIVE_SET_MOD),
+            ("repro/fabric/wrap.py", LIVE_WRAP_MOD),
+            ("repro/api/view.py", CONSUMER_BAD.replace("..fabric", "..fabric")),
+        ],
+        rules=[CrossModuleDeterminismRule()],
+    )
+    assert report.clean, [str(f) for f in report.findings]
+
+
+# -- suppressions apply to interprocedural findings too --------------------------
+
+def test_interproc_finding_is_suppressible():
+    suppressed_src = UNITS_POSITIVE.replace(
+        "return payload_bytes + alpha_frac",
+        "return payload_bytes + alpha_frac  "
+        "# nimble: ignore[units] -- fixture: intentional mix",
+    )
+    report = analyze_sources(
+        [("repro/core/ufix.py", suppressed_src)], rules=[UnitsRule()]
+    )
+    assert report.clean
+    assert len(report.suppressed) == 1

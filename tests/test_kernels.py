@@ -157,3 +157,43 @@ def test_relay_copy(n, d, bc, dtype):
         x = RNG.normal(size=(n, d)).astype(dtype)
     out = relay_copy(jnp.asarray(x), block_chunk=bc, interpret=True)
     np.testing.assert_array_equal(np.asarray(out), x)
+
+
+def test_relay_copy_slot_map_bit_exact():
+    # ISSUE 10 satellite: the slot schedule is runtime data.  Any valid
+    # schedule — parity, reversed parity, constant-slot — must produce a
+    # bit-identical copy, because the slot only selects *which* staging
+    # buffer the chunk passes through, never the data path.
+    from repro.kernels.relay_copy.relay import parity_slot_map
+
+    x = jnp.asarray(RNG.normal(size=(1024, 64)).astype(np.float32))
+    n_chunks = 1024 // 256
+    default = relay_copy(x, block_chunk=256, interpret=True)
+    for slot_map in (
+        parity_slot_map(n_chunks),
+        1 - parity_slot_map(n_chunks),          # swapped slot assignment
+        jnp.zeros((n_chunks,), dtype=jnp.int32),  # degenerate single slot
+    ):
+        out = relay_copy(x, slot_map, block_chunk=256, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(default))
+
+
+def test_relay_copy_slot_swap_does_not_retrace():
+    # the point of the scalar-prefetched slot map: re-targeting staging
+    # slots is a parameter update, not a recompile — one jit cache entry
+    # serves every schedule of the same geometry (ROADMAP item 2)
+    from repro.kernels.relay_copy.relay import (
+        parity_slot_map,
+        relay_copy as relay_jit,
+    )
+
+    relay_jit._clear_cache()
+    x = jnp.asarray(RNG.normal(size=(512, 32)).astype(np.float32))
+    n_chunks = 512 // 256
+    relay_jit(x, parity_slot_map(n_chunks), block_chunk=256, interpret=True)
+    relay_jit(x, 1 - parity_slot_map(n_chunks), block_chunk=256,
+              interpret=True)
+    relay_jit(x, jnp.ones((n_chunks,), dtype=jnp.int32), block_chunk=256,
+              interpret=True)
+    assert relay_jit._cache_size() == 1
